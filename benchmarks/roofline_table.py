@@ -1,0 +1,80 @@
+"""§Roofline table: read the dry-run records and emit the per-(arch × shape ×
+mesh) three-term roofline with bottleneck + usefulness ratio."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.roofline.analysis import HW, model_flops, roofline_terms
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_records(dryrun_dir: str = DRYRUN_DIR) -> List[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def summarize(rec: dict) -> Dict:
+    ha = rec.get("hlo_analysis", {})
+    if "dot_flops" not in ha:
+        return {}
+    terms = roofline_terms({
+        "dot_flops": ha["dot_flops"],
+        "traffic_bytes": ha["traffic_bytes"],
+        "collective_bytes": ha["total_collective_bytes"],
+    })
+    n_dev = 1
+    for v in rec["mesh"].split("x"):
+        n_dev *= int(v)
+    mf = rec.get("model_flops_global", 0.0)
+    useful = (mf / n_dev) / ha["dot_flops"] if ha["dot_flops"] else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": terms["compute_s"], "memory_s": terms["memory_s"],
+        "collective_s": terms["collective_s"],
+        "bottleneck": terms["bottleneck"],
+        "useful_ratio": useful,
+        "params_b": rec.get("num_params", 0) / 1e9,
+    }
+
+
+def markdown_table(rows: List[dict], mesh_filter: str = "16x16") -> str:
+    head = ("| arch | shape | compute s | memory s | collective s | "
+            "bottleneck | useful FLOPs ratio |")
+    sep = "|---|---|---|---|---|---|---|"
+    lines = [head, sep]
+    for r in rows:
+        if not r or r["mesh"] != mesh_filter:
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"**{r['bottleneck']}** | {r['useful_ratio']:.3f} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    rows = [summarize(r) for r in load_records()]
+    rows = [r for r in rows if r]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    print(markdown_table(rows, "16x16"))
+    print()
+    print("# multi-pod (2x16x16)")
+    print(markdown_table(rows, "2x16x16"))
+    # CSV for run.py
+    print()
+    for r in rows:
+        dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},"
+              f"{dom * 1e6:.1f},bottleneck={r['bottleneck']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Benchmark harness — one entry per paper table/figure plus the kernel and
+roofline reports. Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run            # CI-speed defaults
+  PYTHONPATH=src python -m benchmarks.run --full     # paper-scale (hours)
+
+Sections:
+  table1/*    — Tab. 1  (accuracy + comm vs overlap, image VFL)
+  credit/*    — Fig. 6/7 (AUC + comm, tabular VFL)
+  comm/*      — Tab. 1 communication columns at the paper's exact scale
+  kernel/*    — Pallas kernel hot-spot shapes vs jnp oracle
+  roofline/*  — §Roofline dominant term per (arch × shape × mesh), from the
+                dry-run records in experiments/dryrun (run dryrun --all first)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--skip", nargs="*", default=[])
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import ablation_fewshot, comm_cost, credit, kernels_bench, table1
+
+    sections = []
+    if "comm" not in args.skip:
+        sections.append(("comm_cost", comm_cost.main, []))
+    if "kernels" not in args.skip:
+        sections.append(("kernels", kernels_bench.main, []))
+    if "table1" not in args.skip:
+        argv = ["--full"] if args.full else ["--fast"]
+        sections.append(("table1", table1.main, argv))
+    if "credit" not in args.skip:
+        argv = ["--full"] if args.full else ["--fast"]
+        sections.append(("credit", credit.main, argv))
+    if "ablation" not in args.skip:
+        argv = ["--fast"] if not args.full else []
+        sections.append(("ablation_fewshot", ablation_fewshot.main, argv))
+    if "roofline" not in args.skip:
+        def _roofline():
+            from benchmarks import roofline_table
+            roofline_table.main()
+        sections.append(("roofline", _roofline, []))
+
+    for name, fn, argv in sections:
+        print(f"\n# ==== {name} ====", flush=True)
+        old_argv = sys.argv
+        sys.argv = [name] + argv
+        try:
+            fn()
+        except Exception:
+            traceback.print_exc()
+            print(f"{name}/FAILED,0,error")
+        finally:
+            sys.argv = old_argv
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Table 1 reproduction: accuracy + communication vs overlap size (image VFL).
+
+Paper protocol at CPU-tractable synthetic scale: image halves, CNN
+extractors, overlap ∈ {64, 128, 256} (paper: {256..2048} on CIFAR-10;
+scale with --full on a real machine). Methods: vanilla, FedCVT, FedBCD,
+one-shot, few-shot.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.core import (IterativeConfig, ProtocolConfig, SSLConfig,
+                        run_fedbcd, run_fedcvt, run_few_shot, run_one_shot,
+                        run_vanilla)
+from repro.data import make_image_classification, make_vfl_partition
+from repro.models import make_cnn_extractor
+
+
+def run(overlaps, num_samples, iters, epochs, image_size=16, num_classes=10,
+        seed=0):
+    x, y = make_image_classification(jax.random.PRNGKey(seed), num_samples,
+                                     num_classes=num_classes,
+                                     image_size=image_size)
+    rows = []
+    for n_o in overlaps:
+        split = make_vfl_partition(x, y, overlap_size=n_o, seed=seed + 1,
+                                   num_classes=num_classes)
+        mk = lambda: [make_cnn_extractor(rep_dim=64, widths=(8, 16),
+                                         blocks_per_stage=1) for _ in range(2)]
+        ssl = [SSLConfig(modality="image", max_shift=2, cutout_size=4,
+                         confidence_threshold=0.6)] * 2
+        pcfg = ProtocolConfig(client_epochs=epochs, server_epochs=min(3 * epochs, 60),
+                              client_lr=0.02)
+        icfg = IterativeConfig(iterations=iters)
+
+        methods = {
+            "vanilla": lambda: run_vanilla(jax.random.PRNGKey(2), split, mk(), ssl, icfg),
+            "fedcvt": lambda: run_fedcvt(jax.random.PRNGKey(2), split, mk(), ssl, icfg),
+            "fedbcd": lambda: run_fedbcd(jax.random.PRNGKey(2), split, mk(), ssl, icfg),
+            "one_shot": lambda: run_one_shot(jax.random.PRNGKey(2), split, mk(), ssl, pcfg),
+            "few_shot": lambda: run_few_shot(jax.random.PRNGKey(2), split, mk(), ssl, pcfg),
+        }
+        for name, fn in methods.items():
+            t0 = time.time()
+            res = fn()
+            rows.append({
+                "overlap": n_o, "method": name,
+                "metric": res.metric,
+                "comm_times": res.ledger.comm_times(),
+                "comm_mb": res.ledger.total_megabytes(),
+                "wall_s": time.time() - t0,
+            })
+            print(f"overlap={n_o:5d} {name:10s} acc={res.metric:.4f} "
+                  f"times={rows[-1]['comm_times']:6d} "
+                  f"mb={rows[-1]['comm_mb']:8.2f} ({rows[-1]['wall_s']:.0f}s)",
+                  flush=True)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    if args.full:
+        rows = run([256, 512, 1024, 2048], 12000, 8000, 120, image_size=32,
+                   num_classes=10)
+    elif args.fast:
+        rows = run([48], 800, 60, 8, num_classes=4)
+    else:
+        rows = run([32, 64, 128], 2400, 400, 60, num_classes=6)
+    print("\nname,us_per_call,derived")
+    for r in rows:
+        print(f"table1/{r['method']}/overlap{r['overlap']},"
+              f"{r['wall_s'] * 1e6:.0f},"
+              f"acc={r['metric']:.4f};comm_mb={r['comm_mb']:.2f};"
+              f"comm_times={r['comm_times']}")
+
+
+if __name__ == "__main__":
+    main()

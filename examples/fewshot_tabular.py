@@ -1,0 +1,38 @@
+"""Few-shot VFL walkthrough on tabular data: shows the SDPA representation
+estimation (Eq. 10), the Eq. 8-9 gating, and the labeled-set expansion —
+with the gate rate and the 5-round ledger printed at each stage.
+
+  PYTHONPATH=src python examples/fewshot_tabular.py
+"""
+import jax
+
+from repro.core import ProtocolConfig, SSLConfig, run_few_shot, run_one_shot
+from repro.data import make_tabular_credit, make_vfl_partition
+from repro.models import make_mlp_extractor
+
+
+def main() -> None:
+    x, y = make_tabular_credit(jax.random.PRNGKey(0), 4000)
+    # a deliberately tiny overlap — the regime few-shot targets
+    split = make_vfl_partition(x, y, overlap_size=64,
+                               feature_sizes=[10, 13], seed=1)
+    mk = lambda: [make_mlp_extractor(rep_dim=32, hidden=(64,)) for _ in range(2)]
+    ssl = [SSLConfig(modality="tabular")] * 2
+    cfg = ProtocolConfig(client_epochs=5, server_epochs=15,
+                         fewshot_threshold=0.85, use_sdpa_kernel=False)
+
+    one = run_one_shot(jax.random.PRNGKey(1), split, mk(), ssl, cfg)
+    few = run_few_shot(jax.random.PRNGKey(1), split, mk(), ssl, cfg)
+
+    print(f"overlap=64  one-shot AUC={one.metric:.4f} "
+          f"({one.ledger.comm_times()} comm times)")
+    print(f"overlap=64  few-shot AUC={few.metric:.4f} "
+          f"({few.ledger.comm_times()} comm times)")
+    print(f"pseudo-label gate rate per client: "
+          f"{[f'{g:.2%}' for g in few.diagnostics['fewshot_gate_rate']]}")
+    print()
+    print(few.ledger.summary())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Quickstart: one-shot VFL on a synthetic credit-default task in ~a minute.
+
+Two parties hold 10/13 features of the same users; the server holds labels
+for a 200-user overlap. One-shot VFL trains both extractors with exactly
+3 communications per client.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.core import ProtocolConfig, SSLConfig, run_one_shot
+from repro.data import make_tabular_credit, make_vfl_partition
+from repro.models import make_mlp_extractor
+
+
+def main() -> None:
+    x, y = make_tabular_credit(jax.random.PRNGKey(0), 3000)
+    split = make_vfl_partition(x, y, overlap_size=200,
+                               feature_sizes=[10, 13], seed=1)
+    extractors = [make_mlp_extractor(rep_dim=32, hidden=(64,))
+                  for _ in range(2)]
+    ssl = [SSLConfig(modality="tabular")] * 2
+
+    result = run_one_shot(jax.random.PRNGKey(1), split, extractors, ssl,
+                          ProtocolConfig(client_epochs=5, server_epochs=15))
+
+    print(f"test AUC            : {result.metric:.4f}")
+    print(f"k-means purity      : {result.diagnostics['kmeans_purity']}")
+    print(f"comm times/client   : {result.ledger.comm_times()}   (paper: 3)")
+    print(result.ledger.summary())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Train any assigned architecture (reduced) on synthetic tokens — the model
+zoo's runnable path for all 10 families:
+
+  PYTHONPATH=src python examples/zoo_train_lm.py --arch deepseek-v2-236b
+  PYTHONPATH=src python examples/zoo_train_lm.py --arch mamba2-370m --steps 50
+"""
+import argparse
+
+from repro.launch import train as train_mod
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default="mamba2-370m")
+    ap.add_argument("--steps", type=int, default=30)
+    args = ap.parse_args()
+    import sys
+    sys.argv = ["train", "--arch", args.arch, "--reduce",
+                "--steps", str(args.steps), "--batch", "4", "--seq", "64"]
+    train_mod.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Pytree <-> npz checkpointing with atomic writes and step indexing.
+
+Layout: <dir>/ckpt_<step>.npz holding flattened leaves keyed by path string,
+plus a JSON-encoded treedef/metadata entry. Works for any pytree of arrays.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Tuple[dict, Any]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    flat = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
+    return flat, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree: Any, metadata: Optional[dict] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat, _ = _flatten_with_paths(tree)
+    meta = dict(metadata or {})
+    meta["step"] = int(step)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, __meta__=np.frombuffer(json.dumps(meta).encode(), dtype=np.uint8), **flat)
+        os.replace(tmp, path)  # atomic on POSIX
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(f[len("ckpt_"):-len(".npz")]) for f in os.listdir(directory)
+             if f.startswith("ckpt_") and f.endswith(".npz")]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str, template: Any, step: Optional[int] = None) -> Tuple[Any, dict]:
+    """Load into the structure of ``template`` (used for treedef + dtypes)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    blob = np.load(path)
+    meta = json.loads(bytes(blob["__meta__"]).decode())
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    restored = []
+    for i, leaf in enumerate(leaves):
+        arr = blob[f"leaf_{i}"]
+        assert arr.shape == tuple(np.shape(leaf)), (i, arr.shape, np.shape(leaf))
+        restored.append(jnp.asarray(arr, dtype=jnp.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(treedef, restored), meta

@@ -1,0 +1,23 @@
+"""SeamlessM4T-large v2 [arXiv:2308.11596] — encoder-decoder, multimodal.
+
+The mel-spectrogram + conformer feature extractor is a STUB per the brief:
+input_specs() provides precomputed audio-frame embeddings consumed by the
+transformer encoder; the text decoder cross-attends to the encoder output.
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="seamless-m4t-large-v2",
+    family="audio",
+    num_layers=24,                # decoder layers
+    encoder_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=8192,
+    vocab_size=256206,
+    activation="gelu",
+    rope_style="none",            # learned/sinusoidal positions in the original
+    prefix_tokens=1024,           # audio-frame embeddings fed to the encoder
+    source="arXiv:2308.11596",
+))

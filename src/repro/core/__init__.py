@@ -1,0 +1,20 @@
+"""The paper's contribution: one-shot / few-shot VFL (Sun et al., 2023)."""
+from repro.core.comm import CommLedger
+from repro.core.protocol import (ProtocolConfig, VFLResult, run_few_shot,
+                                 run_few_shot_finetune, run_one_shot)
+from repro.core.baselines import IterativeConfig, run_fedbcd, run_fedcvt, run_vanilla
+from repro.core.ssl import SSLConfig
+
+__all__ = [
+    "CommLedger",
+    "ProtocolConfig",
+    "IterativeConfig",
+    "SSLConfig",
+    "VFLResult",
+    "run_one_shot",
+    "run_few_shot",
+    "run_few_shot_finetune",
+    "run_vanilla",
+    "run_fedbcd",
+    "run_fedcvt",
+]

@@ -1,0 +1,112 @@
+"""Weak/strong augmentations for local SSL.
+
+Image augs implement FixMatch's recipe in pure JAX (jit/vmap-safe):
+  weak  α(x): random horizontal flip + random translation (crop-with-pad);
+  strong A(x): weak + cutout + per-channel color jitter + noise
+  (a RandAugment-class perturbation implemented with jax.lax ops).
+
+Tabular augs implement the paper's FixMatch-tab exactly (Eq. 5-6):
+  m_i ~ Bernoulli(r_m),  n_i ~ N(0, σ²)
+  α(x) = m ⊗ x + (1-m) ⊗ x̄          (mask-to-feature-mean)
+  A(x) = α(x) + n                     (plus Gaussian noise)
+where x̄ is the per-feature mean over the party's local data.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------------ images --
+def _rand_flip(key, x):
+    flip = jax.random.bernoulli(key, 0.5, (x.shape[0],))
+    return jnp.where(flip[:, None, None, None], x[:, :, ::-1, :], x)
+
+
+def _rand_translate(key, x, max_shift: int = 4):
+    """Random integer translation via jnp.roll + edge zeroing (crop-with-pad)."""
+    n, h, w, c = x.shape
+    kx, ky = jax.random.split(key)
+    dx = jax.random.randint(kx, (n,), -max_shift, max_shift + 1)
+    dy = jax.random.randint(ky, (n,), -max_shift, max_shift + 1)
+
+    def shift_one(img, dyi, dxi):
+        img = jnp.roll(img, (dyi, dxi), axis=(0, 1))
+        rows = jnp.arange(h)
+        cols = jnp.arange(w)
+        row_ok = jnp.where(dyi >= 0, rows >= dyi, rows < h + dyi)
+        col_ok = jnp.where(dxi >= 0, cols >= dxi, cols < w + dxi)
+        mask = row_ok[:, None] & col_ok[None, :]
+        return img * mask[:, :, None]
+
+    return jax.vmap(shift_one)(x, dy, dx)
+
+
+def _cutout(key, x, size: int = 8):
+    n, h, w, c = x.shape
+    ky, kx = jax.random.split(key)
+    cy = jax.random.randint(ky, (n,), 0, h)
+    cx = jax.random.randint(kx, (n,), 0, w)
+    rows = jnp.arange(h)[None, :, None]
+    cols = jnp.arange(w)[None, None, :]
+    mask = ((jnp.abs(rows - cy[:, None, None]) > size // 2)
+            | (jnp.abs(cols - cx[:, None, None]) > size // 2))
+    return x * mask[..., None]
+
+
+def weak_augment_image(key, x, max_shift: int = 4):
+    k1, k2 = jax.random.split(key)
+    return _rand_translate(k2, _rand_flip(k1, x), max_shift)
+
+
+def strong_augment_image(key, x, max_shift: int = 4, cutout_size: int = 8,
+                         jitter: float = 0.25, noise: float = 0.1):
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    y = weak_augment_image(k1, x, max_shift)
+    y = _cutout(k2, y, cutout_size)
+    # per-sample per-channel affine color jitter
+    gain = 1.0 + jitter * jax.random.uniform(k3, (x.shape[0], 1, 1, x.shape[-1]), minval=-1, maxval=1)
+    bias = jitter * jax.random.uniform(k4, (x.shape[0], 1, 1, x.shape[-1]), minval=-1, maxval=1)
+    y = y * gain + bias
+    y = y + noise * jax.random.normal(k5, y.shape)
+    return y
+
+
+# ----------------------------------------------------------------- tabular --
+def tab_augment_pair(key, x, feature_mean, mask_ratio: float = 0.2, sigma: float = 0.1
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """FixMatch-tab (Eq. 5-6). Returns (weak, strong) sharing the same mask m,
+    exactly as the paper specifies ("we first sample a binary mask for both
+    weak and strong augmentation")."""
+    km, kn = jax.random.split(key)
+    keep = jax.random.bernoulli(km, 1.0 - mask_ratio, x.shape)  # m_i=1 keeps x_i
+    weak = jnp.where(keep, x, feature_mean)
+    noise = sigma * jax.random.normal(kn, x.shape)
+    strong = weak + noise
+    return weak, strong
+
+
+def weak_augment_tab(key, x, feature_mean, mask_ratio: float = 0.2):
+    keep = jax.random.bernoulli(key, 1.0 - mask_ratio, x.shape)
+    return jnp.where(keep, x, feature_mean)
+
+
+# ------------------------------------------------------------------ tokens --
+def token_augment_pair(key, x, mask_id: int = 0, mask_ratio: float = 0.15,
+                       strong_ratio: float = 0.4):
+    """FixMatch-tab generalized to token sequences (DESIGN.md §4): weak =
+    Bernoulli(r_m) token masking; strong = heavier masking. x: (B, S) int."""
+    kw, ks = jax.random.split(key)
+    keep_w = jax.random.bernoulli(kw, 1.0 - mask_ratio, x.shape)
+    keep_s = keep_w & jax.random.bernoulli(ks, 1.0 - strong_ratio, x.shape)
+    weak = jnp.where(keep_w, x, mask_id)
+    strong = jnp.where(keep_s, x, mask_id)
+    return weak, strong
+
+
+def weak_augment_tokens(key, x, mask_id: int = 0, mask_ratio: float = 0.15):
+    keep = jax.random.bernoulli(key, 1.0 - mask_ratio, x.shape)
+    return jnp.where(keep, x, mask_id)

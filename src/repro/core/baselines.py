@@ -1,0 +1,324 @@
+"""Baseline VFL methods from the paper's evaluation (§5.1):
+
+* ``run_vanilla``  — SplitNN-style iterative VFL: every iteration uploads
+  minibatch representations and downloads partial gradients (2 comm events
+  per client per iteration). Also used as the end-to-end finetuning stage of
+  "few-shot + finetune" (Tab. 1 last row).
+* ``run_fedbcd``   — FedBCD [20]: Q local updates per communication round
+  using the *stale* partial gradients.
+* ``run_fedcvt``   — FedCVT-lite [15]: iterative VFL where the server expands
+  each batch with unaligned samples whose missing-party representations are
+  attention-estimated from the overlap set and whose pseudo-labels pass a
+  confidence threshold (the cross-view-training idea, without the paper's
+  full 5-loss apparatus — see DESIGN.md §7).
+
+All baselines train *only* on information the respective method is allowed to
+see; all transfers go through the CommLedger.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.core import estimator
+from repro.core.client import ClientParams, VFLClient, make_client
+from repro.core.comm import CommLedger
+from repro.core.metrics import accuracy, binary_auc
+from repro.core.protocol import ProtocolConfig, VFLResult, _build_clients, _evaluate
+from repro.core.server import VFLServer, concat_reps
+from repro.core.ssl import SSLConfig, cross_entropy
+from repro.data.loader import epoch_batches
+from repro.models.extractors import Model, make_classifier
+
+
+@dataclass
+class IterativeConfig:
+    iterations: int = 2000
+    batch_size: int = 32
+    client_lr: float = 0.01
+    server_lr: float = 0.01
+    fedbcd_q: int = 5               # Q (paper: 5)
+    fedcvt_threshold: float = 0.95
+    eval_every: int = 200
+
+
+def _init_server(key, server: VFLServer, reps):
+    h = concat_reps(reps)
+    server.classifier = make_classifier(server.num_classes)
+    server.params = server.classifier.init(key, h)
+    return server
+
+
+def _make_vanilla_step(clients: Sequence[VFLClient], server: VFLServer,
+                       cfg: IterativeConfig):
+    """Jointly-differentiated SplitNN iteration. Gradients are computed in one
+    jax.grad for efficiency, but the *communication* is exactly: reps up,
+    rep-grads down (logged by the caller with the true tensor sizes)."""
+    txs = [optim.sgd(cfg.client_lr, momentum=0.9) for _ in clients]
+    tx_s = optim.sgd(cfg.server_lr, momentum=0.9)
+    extractors = [c.extractor for c in clients]
+    classifier_apply = None  # bound at first call via server.classifier
+
+    def make(server_classifier):
+        @jax.jit
+        def step(client_params: List, server_params, opt_states, opt_state_s,
+                 xs, y):
+            def loss_fn(cp_list, sp):
+                reps = [ext.apply(p.extractor, x)
+                        for ext, p, x in zip(extractors, cp_list, xs)]
+                logits = server_classifier.apply(sp, concat_reps(reps))
+                return jnp.mean(cross_entropy(logits, y))
+
+            loss, (g_clients, g_server) = jax.value_and_grad(
+                loss_fn, argnums=(0, 1))(client_params, server_params)
+            new_cp, new_os = [], []
+            for p, g, tx, os_ in zip(client_params, g_clients, txs, opt_states):
+                upd, os_ = tx.update(g, os_, p)
+                new_cp.append(optim.apply_updates(p, upd))
+                new_os.append(os_)
+            upd_s, opt_state_s = tx_s.update(g_server, opt_state_s, server_params)
+            server_params = optim.apply_updates(server_params, upd_s)
+            return new_cp, server_params, new_os, opt_state_s, loss
+
+        return step
+
+    return make, txs, tx_s
+
+
+def run_vanilla(
+    key: jax.Array,
+    split,
+    extractors: Sequence[Model],
+    ssl_cfgs: Sequence[SSLConfig],
+    cfg: IterativeConfig = IterativeConfig(),
+    clients: Optional[List[VFLClient]] = None,
+    server: Optional[VFLServer] = None,
+    ledger: Optional[CommLedger] = None,
+) -> VFLResult:
+    ledger = ledger if ledger is not None else CommLedger()
+    key, kc, ks = jax.random.split(key, 3)
+    if clients is None:
+        clients = _build_clients(kc, split, extractors, ssl_cfgs)
+    if server is None or server.params is None:
+        server = VFLServer(num_classes=split.num_classes)
+        reps0 = [c.extract(x[:2]) for c, x in zip(clients, split.aligned)]
+        server = _init_server(ks, server, reps0)
+
+    make_step, txs, tx_s = _make_vanilla_step(clients, server, cfg)
+    step = make_step(server.classifier)
+    client_params = [c.params for c in clients]
+    server_params = server.params
+    opt_states = [tx.init(p) for tx, p in zip(txs, client_params)]
+    opt_state_s = tx_s.init(server_params)
+
+    n = split.labels.shape[0]
+    bs = min(cfg.batch_size, n)
+    rep_dim = clients[0].extractor.rep_dim
+    it = 0
+    seed0 = int(jax.random.randint(key, (), 0, 2**31 - 1))
+    while it < cfg.iterations:
+        for idx in epoch_batches(n, bs, seed0 + it):
+            if it >= cfg.iterations:
+                break
+            xs = [x[idx] for x in split.aligned]
+            client_params, server_params, opt_states, opt_state_s, loss = step(
+                client_params, server_params, opt_states, opt_state_s,
+                xs, split.labels[idx])
+            # communication: reps up + grads down, both (bs, rep_dim) f32
+            r_up, r_dn = ledger.next_round(), ledger.next_round()
+            for c in clients:
+                ledger.log_bytes(c.index, "up", "reps_batch", bs * rep_dim * 4, round=r_up)
+                ledger.log_bytes(c.index, "down", "grads_batch", bs * rep_dim * 4, round=r_dn)
+            it += 1
+
+    clients = [replace(c, params=ClientParams(*p)) for c, p in zip(clients, client_params)]
+    server.params = server_params
+    name, metric = _evaluate(server, clients, split)
+    return VFLResult(name, metric, ledger, clients, server,
+                     {"iterations": cfg.iterations})
+
+
+def run_fedbcd(
+    key: jax.Array,
+    split,
+    extractors: Sequence[Model],
+    ssl_cfgs: Sequence[SSLConfig],
+    cfg: IterativeConfig = IterativeConfig(),
+) -> VFLResult:
+    """FedBCD-p: per round, one rep exchange then Q parallel local updates on
+    the stale partial gradients (clients) / stale reps (server)."""
+    ledger = CommLedger()
+    key, kc, ks = jax.random.split(key, 3)
+    clients = _build_clients(kc, split, extractors, ssl_cfgs)
+    server = VFLServer(num_classes=split.num_classes)
+    reps0 = [c.extract(x[:2]) for c, x in zip(clients, split.aligned)]
+    server = _init_server(ks, server, reps0)
+
+    txs = [optim.sgd(cfg.client_lr, momentum=0.9) for _ in clients]
+    tx_s = optim.sgd(cfg.server_lr, momentum=0.9)
+    exts = [c.extractor for c in clients]
+    clf = server.classifier
+    Q = cfg.fedbcd_q
+
+    @jax.jit
+    def round_step(client_params, server_params, opt_states, opt_state_s, xs, y):
+        # --- one communication round: fresh reps and partial gradients -----
+        reps = [ext.apply(p.extractor, x) for ext, p, x in zip(exts, client_params, xs)]
+
+        def rep_loss(rep_list, sp):
+            logits = clf.apply(sp, concat_reps(rep_list))
+            return jnp.mean(cross_entropy(logits, y))
+
+        g_reps = jax.grad(rep_loss, argnums=0)(reps, server_params)
+
+        # --- Q stale-gradient local updates on each client ------------------
+        new_cp, new_os = [], []
+        for ext, p, os_, tx, x, g in zip(exts, client_params, opt_states, txs, xs, g_reps):
+            def q_body(_, carry):
+                p_, os__ = carry
+                def local_obj(pp):
+                    # <stale ∂L/∂H, f_k(x; θ)> — the FedBCD surrogate
+                    return jnp.sum(jax.lax.stop_gradient(g) * ext.apply(pp.extractor, x))
+                gq = jax.grad(local_obj)(p_)
+                upd, os__ = tx.update(gq, os__, p_)
+                return optim.apply_updates(p_, upd), os__
+            p, os_ = jax.lax.fori_loop(0, Q, q_body, (p, os_))
+            new_cp.append(p)
+            new_os.append(os_)
+
+        # --- Q server updates on the stale reps -----------------------------
+        def s_body(_, carry):
+            sp, os_s = carry
+            gs = jax.grad(lambda spp: rep_loss([jax.lax.stop_gradient(r) for r in reps], spp))(sp)
+            upd, os_s = tx_s.update(gs, os_s, sp)
+            return optim.apply_updates(sp, upd), os_s
+        server_params, opt_state_s = jax.lax.fori_loop(0, Q, s_body, (server_params, opt_state_s))
+        return new_cp, server_params, new_os, opt_state_s
+
+    client_params = [c.params for c in clients]
+    server_params = server.params
+    opt_states = [tx.init(p) for tx, p in zip(txs, client_params)]
+    opt_state_s = tx_s.init(server_params)
+
+    n = split.labels.shape[0]
+    bs = min(cfg.batch_size, n)
+    rep_dim = clients[0].extractor.rep_dim
+    rounds = cfg.iterations // Q
+    it = 0
+    seed0 = int(jax.random.randint(key, (), 0, 2**31 - 1))
+    while it < rounds:
+        for idx in epoch_batches(n, bs, seed0 + it):
+            if it >= rounds:
+                break
+            xs = [x[idx] for x in split.aligned]
+            client_params, server_params, opt_states, opt_state_s = round_step(
+                client_params, server_params, opt_states, opt_state_s,
+                xs, split.labels[idx])
+            r_up, r_dn = ledger.next_round(), ledger.next_round()
+            for c in clients:
+                ledger.log_bytes(c.index, "up", "reps_batch", bs * rep_dim * 4, round=r_up)
+                ledger.log_bytes(c.index, "down", "grads_batch", bs * rep_dim * 4, round=r_dn)
+            it += 1
+
+    clients = [replace(c, params=ClientParams(*p)) for c, p in zip(clients, client_params)]
+    server.params = server_params
+    name, metric = _evaluate(server, clients, split)
+    return VFLResult(name, metric, ledger, clients, server,
+                     {"rounds": rounds, "Q": Q})
+
+
+def run_fedcvt(
+    key: jax.Array,
+    split,
+    extractors: Sequence[Model],
+    ssl_cfgs: Sequence[SSLConfig],
+    cfg: IterativeConfig = IterativeConfig(),
+) -> VFLResult:
+    """FedCVT-lite: vanilla iterative VFL + per-iteration training-set
+    expansion. Each round, the server attention-estimates missing reps of a
+    sampled unaligned batch and keeps samples whose classifier confidence
+    exceeds the threshold, training on them with their pseudo labels."""
+    ledger = CommLedger()
+    key, kc, ks = jax.random.split(key, 3)
+    clients = _build_clients(kc, split, extractors, ssl_cfgs)
+    server = VFLServer(num_classes=split.num_classes)
+    reps0 = [c.extract(x[:2]) for c, x in zip(clients, split.aligned)]
+    server = _init_server(ks, server, reps0)
+
+    txs = [optim.sgd(cfg.client_lr, momentum=0.9) for _ in clients]
+    tx_s = optim.sgd(cfg.server_lr, momentum=0.9)
+    exts = [c.extractor for c in clients]
+    clf = server.classifier
+    K = len(clients)
+
+    @jax.jit
+    def step(client_params, server_params, opt_states, opt_state_s,
+             xs_o, y, xs_u):
+        def loss_fn(cp_list, sp):
+            reps_o = [ext.apply(p.extractor, x) for ext, p, x in zip(exts, cp_list, xs_o)]
+            logits = clf.apply(sp, concat_reps(reps_o))
+            loss = jnp.mean(cross_entropy(logits, y))
+            # cross-view expansion: for each party's unaligned batch, estimate
+            # the other parties' reps from the *overlap* batch reps
+            for k_idx in range(K):
+                h_u = exts[k_idx].apply(cp_list[k_idx].extractor, xs_u[k_idx])
+                parts = []
+                for j in range(K):
+                    if j == k_idx:
+                        parts.append(h_u)
+                    else:
+                        parts.append(estimator.sdpa_transform(h_u, reps_o[k_idx], reps_o[j]))
+                logits_u = clf.apply(sp, concat_reps(parts))
+                p_u = jax.nn.softmax(jax.lax.stop_gradient(logits_u), axis=-1)
+                pseudo = jnp.argmax(p_u, axis=-1)
+                mask = (jnp.max(p_u, axis=-1) > cfg.fedcvt_threshold).astype(jnp.float32)
+                ce = cross_entropy(logits_u, pseudo)
+                loss = loss + jnp.sum(ce * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+            return loss
+
+        loss, (g_c, g_s) = jax.value_and_grad(loss_fn, argnums=(0, 1))(
+            client_params, server_params)
+        new_cp, new_os = [], []
+        for p, g, tx, os_ in zip(client_params, g_c, txs, opt_states):
+            upd, os_ = tx.update(g, os_, p)
+            new_cp.append(optim.apply_updates(p, upd))
+            new_os.append(os_)
+        upd_s, opt_state_s = tx_s.update(g_s, opt_state_s, server_params)
+        return new_cp, optim.apply_updates(server_params, upd_s), new_os, opt_state_s, loss
+
+    client_params = [c.params for c in clients]
+    server_params = server.params
+    opt_states = [tx.init(p) for tx, p in zip(txs, client_params)]
+    opt_state_s = tx_s.init(server_params)
+
+    n = split.labels.shape[0]
+    bs = min(cfg.batch_size, n)
+    rep_dim = clients[0].extractor.rep_dim
+    rng = np.random.RandomState(0)
+    it = 0
+    seed0 = int(jax.random.randint(key, (), 0, 2**31 - 1))
+    while it < cfg.iterations:
+        for idx in epoch_batches(n, bs, seed0 + it):
+            if it >= cfg.iterations:
+                break
+            xs_o = [x[idx] for x in split.aligned]
+            xs_u = [x[rng.randint(0, x.shape[0], size=bs)] for x in split.unaligned]
+            client_params, server_params, opt_states, opt_state_s, _ = step(
+                client_params, server_params, opt_states, opt_state_s,
+                xs_o, split.labels[idx], xs_u)
+            r_up, r_dn = ledger.next_round(), ledger.next_round()
+            for c in clients:
+                # overlap reps + unaligned reps up; both gradients down
+                ledger.log_bytes(c.index, "up", "reps_batch", 2 * bs * rep_dim * 4, round=r_up)
+                ledger.log_bytes(c.index, "down", "grads_batch", 2 * bs * rep_dim * 4, round=r_dn)
+            it += 1
+
+    clients = [replace(c, params=ClientParams(*p)) for c, p in zip(clients, client_params)]
+    server.params = server_params
+    name, metric = _evaluate(server, clients, split)
+    return VFLResult(name, metric, ledger, clients, server, {"iterations": cfg.iterations})

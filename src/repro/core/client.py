@@ -1,0 +1,122 @@
+"""VFL client: representation extractor + local classification head + SSL.
+
+The client never sees true labels. Its local model is (extractor f_k → local
+head), trained by semi-supervised learning on gradient-clustering
+pseudo-labels (one-shot, Alg. 1 l.28-34) optionally expanded with the
+server-gated pseudo-labeled unaligned samples (few-shot, Alg. 2 l.11-19).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from functools import partial
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.core.ssl import SSLConfig, ssl_loss
+from repro.data.loader import epoch_batches
+from repro.models.extractors import Model, make_classifier
+
+
+class ClientParams(NamedTuple):
+    extractor: Any
+    head: Any
+
+
+@dataclass
+class VFLClient:
+    index: int
+    extractor: Model
+    head: Model
+    params: ClientParams
+    ssl_cfg: SSLConfig
+    feature_mean: Optional[jnp.ndarray]   # x̄ for FixMatch-tab
+
+    # ------------------------------------------------------------------ api
+    def extract(self, x: jnp.ndarray) -> jnp.ndarray:
+        return self.extractor.apply(self.params.extractor, x)
+
+    def local_logits(self, x: jnp.ndarray) -> jnp.ndarray:
+        reps = self.extractor.apply(self.params.extractor, x)
+        return self.head.apply(self.params.head, reps)
+
+    def predict(self, x: jnp.ndarray) -> jnp.ndarray:
+        return jnp.argmax(self.local_logits(x), axis=-1)
+
+
+def make_client(key: jax.Array, index: int, extractor: Model, num_classes: int,
+                sample_input: jnp.ndarray, ssl_cfg: SSLConfig,
+                local_data_for_mean: Optional[jnp.ndarray] = None) -> VFLClient:
+    k_e, k_h = jax.random.split(key)
+    e_params = extractor.init(k_e, sample_input)
+    head = make_classifier(num_classes)
+    reps = extractor.apply(e_params, sample_input[:1])
+    h_params = head.init(k_h, reps)
+    fm = None
+    if local_data_for_mean is not None and local_data_for_mean.ndim == 2:
+        fm = jnp.mean(local_data_for_mean, axis=0)
+    return VFLClient(index=index, extractor=extractor, head=head,
+                     params=ClientParams(e_params, h_params),
+                     ssl_cfg=ssl_cfg, feature_mean=fm)
+
+
+# ----------------------------------------------------------------- SSL loop
+def _make_ssl_step(client: VFLClient, tx: optim.GradientTransformation):
+    cfg = client.ssl_cfg
+    fm = client.feature_mean
+
+    def logits_fn(params: ClientParams, x):
+        return client.head.apply(params.head, client.extractor.apply(params.extractor, x))
+
+    @jax.jit
+    def step(params, opt_state, key, xb_l, yb_l, xb_u):
+        def loss_fn(p):
+            return ssl_loss(logits_fn, p, key, xb_l, yb_l, xb_u, cfg, fm)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        updates, opt_state = tx.update(grads, opt_state, params)
+        params = optim.apply_updates(params, updates)
+        return params, opt_state, metrics
+
+    return step
+
+
+def local_ssl_train(
+    key: jax.Array,
+    client: VFLClient,
+    x_labeled: jnp.ndarray,
+    y_pseudo: jnp.ndarray,
+    x_unlabeled: jnp.ndarray,
+    epochs: int,
+    batch_size: int = 32,
+    learning_rate: float = 0.01,
+    momentum: float = 0.9,
+    unlabeled_ratio: int = 2,
+) -> Tuple[VFLClient, dict]:
+    """Alg. 1 lines 29-34: epochs of minibatch SSL. Labeled and unlabeled
+    minibatches are drawn independently (FixMatch uses μ=unlabeled_ratio×
+    larger unlabeled batches)."""
+    tx = optim.chain(optim.clip_by_global_norm(5.0),
+                     optim.sgd(learning_rate, momentum=momentum))
+    opt_state = tx.init(client.params)
+    step = _make_ssl_step(client, tx)
+    params = client.params
+
+    n_l, n_u = x_labeled.shape[0], x_unlabeled.shape[0]
+    bs_l = min(batch_size, n_l)
+    bs_u = min(batch_size * unlabeled_ratio, n_u)
+    last_metrics: dict = {}
+    seed0 = int(jax.random.randint(key, (), 0, 2**31 - 1))
+    for e in range(epochs):
+        u_rng = np.random.RandomState(seed0 + 7919 * e)
+        for bi, idx_l in enumerate(epoch_batches(n_l, bs_l, seed0 + e)):
+            idx_u = u_rng.randint(0, n_u, size=bs_u)
+            key, k = jax.random.split(key)
+            params, opt_state, m = step(params, opt_state, k,
+                                        x_labeled[idx_l], y_pseudo[idx_l],
+                                        x_unlabeled[idx_u])
+            last_metrics = {k_: float(v) for k_, v in m.items()}
+    return replace(client, params=ClientParams(*params)), last_metrics

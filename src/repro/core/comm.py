@@ -1,0 +1,97 @@
+"""Communication ledger — the paper's two efficiency metrics.
+
+The paper reports, per method (Tab. 1 / Fig. 6-7):
+  * ``comm times`` — the number of upload/download events a client performs
+    over the whole training session (vanilla VFL: 2 per iteration; one-shot
+    VFL: 3 total = upload reps, download grads, upload reps);
+  * ``comm cost``  — total bytes moved between clients and server.
+
+Every protocol phase in ``repro.core`` logs through a ``CommLedger`` so the
+benchmark tables are produced by the *same code path* as training, not by a
+separate analytic formula (the analytic formula is kept as a cross-check in
+``benchmarks/comm_cost.py``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+
+def nbytes(x) -> int:
+    """Size in bytes of an array or pytree of arrays."""
+    import jax
+
+    leaves = jax.tree_util.tree_leaves(x)
+    total = 0
+    for leaf in leaves:
+        total += int(np.prod(np.shape(leaf))) * np.dtype(leaf.dtype).itemsize
+    return total
+
+
+@dataclass
+class CommEvent:
+    party: int          # client index (server side of the link is implicit)
+    direction: str      # "up" (client->server) or "down" (server->client)
+    tag: str            # e.g. "reps_overlap", "partial_grads"
+    bytes: int
+    round: int = -1     # payloads sharing a round id travel in one message
+
+
+@dataclass
+class CommLedger:
+    events: List[CommEvent] = field(default_factory=list)
+    _round_counter: int = 0
+
+    def next_round(self) -> int:
+        self._round_counter += 1
+        return self._round_counter
+
+    def log(self, party: int, direction: str, tag: str, payload,
+            round: int | None = None) -> None:
+        assert direction in ("up", "down"), direction
+        if round is None:
+            round = self.next_round()
+        self.events.append(CommEvent(party, direction, tag, nbytes(payload), round))
+
+    def log_bytes(self, party: int, direction: str, tag: str, num_bytes: int,
+                  round: int | None = None) -> None:
+        assert direction in ("up", "down"), direction
+        if round is None:
+            round = self.next_round()
+        self.events.append(CommEvent(party, direction, tag, int(num_bytes), round))
+
+    # -- the paper's metrics ------------------------------------------------
+    def total_bytes(self) -> int:
+        return sum(e.bytes for e in self.events)
+
+    def total_megabytes(self) -> float:
+        return self.total_bytes() / 2**20
+
+    def comm_times(self, party: int | None = None) -> int:
+        """Number of distinct communication rounds a client participates in
+        (payloads bundled in the same message — same round id — count once).
+        Without a party argument: max over parties (the session is gated by
+        the busiest client)."""
+        if party is not None:
+            return len({e.round for e in self.events if e.party == party})
+        parties = {e.party for e in self.events}
+        if not parties:
+            return 0
+        return max(len({e.round for e in self.events if e.party == p})
+                   for p in parties)
+
+    def by_tag(self) -> Dict[str, Tuple[int, int]]:
+        out: Dict[str, Tuple[int, int]] = {}
+        for e in self.events:
+            cnt, byt = out.get(e.tag, (0, 0))
+            out[e.tag] = (cnt + 1, byt + e.bytes)
+        return out
+
+    def summary(self) -> str:
+        lines = [f"total: {self.total_megabytes():.2f} MB over "
+                 f"{self.comm_times()} comm times (busiest client)"]
+        for tag, (cnt, byt) in sorted(self.by_tag().items()):
+            lines.append(f"  {tag:24s} x{cnt:<6d} {byt / 2**20:9.3f} MB")
+        return "\n".join(lines)

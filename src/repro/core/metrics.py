@@ -1,0 +1,30 @@
+"""Utility metrics: accuracy and AUC (rank-based, no sklearn)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def accuracy(logits: jnp.ndarray, labels: jnp.ndarray) -> float:
+    return float(jnp.mean((jnp.argmax(logits, axis=-1) == labels)))
+
+
+def binary_auc(scores, labels) -> float:
+    """Mann-Whitney AUC with tie correction via average ranks (numpy)."""
+    s = np.asarray(scores, np.float64)
+    labels_np = np.asarray(labels)
+    order = np.argsort(s)
+    sorted_s = s[order]
+    r = np.arange(1, len(s) + 1, dtype=np.float64)
+    uniq, inv, counts = np.unique(sorted_s, return_inverse=True, return_counts=True)
+    sums = np.zeros(len(uniq))
+    np.add.at(sums, inv, r)
+    mean_ranks = sums / counts
+    ranks = np.empty(len(s))
+    ranks[order] = mean_ranks[inv]
+    n_pos = int(labels_np.sum())
+    n_neg = len(labels_np) - n_pos
+    if n_pos == 0 or n_neg == 0:
+        return 0.5
+    return float((ranks[labels_np == 1].sum() - n_pos * (n_pos + 1) / 2)
+                 / (n_pos * n_neg))

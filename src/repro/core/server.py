@@ -1,0 +1,113 @@
+"""VFL server: label holder, partial-gradient computation, classifier training.
+
+Steps ②/⑥ of one-shot VFL and the auxiliary/joint classifier fitting of
+few-shot VFL (Alg. 2 lines 2-4) live here. The server owns Y_o and θ_c and
+never ships either to clients — only ∇_{H_o^k} L, C, and p̂.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.core.ssl import cross_entropy
+from repro.data.loader import epoch_batches
+from repro.models.extractors import Model, make_classifier
+
+
+def concat_reps(reps: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    """h^1 ∘ … ∘ h^K (Eq. 2)."""
+    return jnp.concatenate(list(reps), axis=-1)
+
+
+@dataclass
+class VFLServer:
+    num_classes: int
+    classifier: Model = None            # joint f_c
+    params: Any = None
+    aux_classifiers: List[Model] = field(default_factory=list)   # f_c^k
+    aux_params: List[Any] = field(default_factory=list)
+
+    # -------------------------------------------------- step ②: partial grads
+    def partial_gradients(self, key: jax.Array, reps: Sequence[jnp.ndarray],
+                          labels: jnp.ndarray) -> List[jnp.ndarray]:
+        """∇_{H_o^k} g(f_c(H¹∘…∘H^K), Y_o) for every k (Alg. 1 line 6).
+
+        Initializes θ_c lazily on first call (the paper computes the partial
+        gradients with the freshly initialized classifier)."""
+        h = concat_reps(reps)
+        if self.params is None:
+            self.classifier = make_classifier(self.num_classes)
+            self.params = self.classifier.init(key, h)
+
+        def loss_of_reps(parts):
+            logits = self.classifier.apply(self.params, concat_reps(parts))
+            return jnp.mean(cross_entropy(logits, labels))
+
+        grads = jax.grad(loss_of_reps)(list(reps))
+        return list(grads)
+
+    # ------------------------------------------------ step ⑥: train classifier
+    def train_classifier(self, key: jax.Array, reps: Sequence[jnp.ndarray],
+                         labels: jnp.ndarray, epochs: int = 50,
+                         batch_size: int = 32, learning_rate: float = 0.01):
+        h = concat_reps(reps)
+        if self.classifier is None:
+            self.classifier = make_classifier(self.num_classes)
+        key, k0 = jax.random.split(key)
+        self.params = self.classifier.init(k0, h)   # re-fit on fresh reps
+        self.params = _fit(key, self.classifier, self.params, h, labels,
+                           epochs, batch_size, learning_rate)
+        return self
+
+    # ----------------------------------- few-shot: aux + joint classifiers (②')
+    def fit_aux_classifiers(self, key: jax.Array, reps: Sequence[jnp.ndarray],
+                            labels: jnp.ndarray, epochs: int = 50,
+                            batch_size: int = 32, learning_rate: float = 0.01):
+        """θ_c^k ← argmin g(f_c^k(H_o^k), Y_o)  (Alg. 2 line 2)."""
+        self.aux_classifiers, self.aux_params = [], []
+        for k_idx, h in enumerate(reps):
+            key, k0, k1 = jax.random.split(key, 3)
+            clf = make_classifier(self.num_classes)
+            p = clf.init(k0, h)
+            p = _fit(k1, clf, p, h, labels, epochs, batch_size, learning_rate)
+            self.aux_classifiers.append(clf)
+            self.aux_params.append(p)
+        return self
+
+    def aux_logits_fn(self, k: int) -> Callable:
+        clf, p = self.aux_classifiers[k], self.aux_params[k]
+        return lambda h: clf.apply(p, h)
+
+    def joint_logits_fn(self) -> Callable:
+        return lambda h: self.classifier.apply(self.params, h)
+
+    # --------------------------------------------------------------- predict
+    def predict_logits(self, reps: Sequence[jnp.ndarray]) -> jnp.ndarray:
+        return self.classifier.apply(self.params, concat_reps(reps))
+
+
+def _fit(key, model: Model, params, x, y, epochs, batch_size, lr):
+    tx = optim.chain(optim.clip_by_global_norm(5.0), optim.sgd(lr, momentum=0.9))
+    opt_state = tx.init(params)
+
+    @jax.jit
+    def step(params, opt_state, xb, yb):
+        def loss_fn(p):
+            return jnp.mean(cross_entropy(model.apply(p, xb), yb))
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        updates, opt_state = tx.update(grads, opt_state, params)
+        return optim.apply_updates(params, updates), opt_state, loss
+
+    n = x.shape[0]
+    bs = min(batch_size, n)
+    seed0 = int(jax.random.randint(key, (), 0, 2**31 - 1))
+    for e in range(epochs):
+        for idx in epoch_batches(n, bs, seed0 + e):
+            params, opt_state, _ = step(params, opt_state, x[idx], y[idx])
+    return params

@@ -1,0 +1,90 @@
+"""Local semi-supervised learning (step ④): FixMatch and FixMatch-tab.
+
+Implements the abstract objective of Eq. (4)
+
+    l_ssl(θ; X_u, X_o, Ŷ_o) = l_s(θ; X_o, Ŷ_o) + λ_u · l_u(θ; X_u)
+
+with FixMatch's pseudo-label-with-confidence-threshold form of l_u:
+    q = p(y | α(x_u));  l_u = 1[max q > τ] · CE(p(y | A(x_u)), argmax q)
+
+Modality dispatch picks the paper's augmentations: image (flip/translate/
+cutout/jitter) or tabular (Eq. 5-6 feature masking + noise). "feature"
+modality = tabular augs applied to any flat feature vector (used when the
+extractor is an LM/SSM backbone over embeddings — DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import augment
+
+
+@dataclass(frozen=True)
+class SSLConfig:
+    modality: str = "image"          # "image" | "tabular" | "token"
+    lambda_u: float = 1.0            # λ_u in Eq. (4)
+    confidence_threshold: float = 0.95   # τ (FixMatch default)
+    mask_ratio: float = 0.2          # r_m (paper: 0.2)
+    sigma: float = 0.1               # σ   (paper: 0.1)
+    max_shift: int = 4
+    cutout_size: int = 8
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+
+
+def _augment_pair(key, x, cfg: SSLConfig, feature_mean):
+    """Return (weak, strong) views for the configured modality."""
+    if cfg.modality == "image":
+        kw, ks = jax.random.split(key)
+        return (augment.weak_augment_image(kw, x, cfg.max_shift),
+                augment.strong_augment_image(ks, x, cfg.max_shift, cfg.cutout_size))
+    if cfg.modality == "token":
+        return augment.token_augment_pair(key, x, mask_ratio=cfg.mask_ratio)
+    return augment.tab_augment_pair(key, x, feature_mean, cfg.mask_ratio, cfg.sigma)
+
+
+def ssl_loss(
+    logits_fn: Callable,          # (params, x) -> (B, C)
+    params,
+    key: jax.Array,
+    x_labeled: jnp.ndarray,
+    y_labeled: jnp.ndarray,
+    x_unlabeled: jnp.ndarray,
+    cfg: SSLConfig,
+    feature_mean: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, dict]:
+    """One minibatch of Eq. (4). Returns (loss, metrics)."""
+    k_l, k_u = jax.random.split(key)
+
+    # -- supervised term on (weakly augmented) labeled data ------------------
+    if cfg.modality == "image":
+        xl = augment.weak_augment_image(k_l, x_labeled, cfg.max_shift)
+    elif cfg.modality == "token":
+        xl = augment.weak_augment_tokens(k_l, x_labeled, mask_ratio=cfg.mask_ratio)
+    else:
+        xl = augment.weak_augment_tab(k_l, x_labeled, feature_mean, cfg.mask_ratio)
+    l_s = jnp.mean(cross_entropy(logits_fn(params, xl), y_labeled))
+
+    # -- unsupervised FixMatch term ------------------------------------------
+    weak_u, strong_u = _augment_pair(k_u, x_unlabeled, cfg, feature_mean)
+    q = jax.nn.softmax(logits_fn(params, weak_u), axis=-1)
+    q = jax.lax.stop_gradient(q)
+    pseudo = jnp.argmax(q, axis=-1)
+    conf = jnp.max(q, axis=-1)
+    mask = (conf > cfg.confidence_threshold).astype(jnp.float32)
+    ce_u = cross_entropy(logits_fn(params, strong_u), pseudo)
+    l_u = jnp.sum(ce_u * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    loss = l_s + cfg.lambda_u * l_u
+    metrics = {
+        "loss": loss, "l_s": l_s, "l_u": l_u,
+        "pseudo_mask_rate": jnp.mean(mask),
+    }
+    return loss, metrics

@@ -1,0 +1,123 @@
+"""Structured synthetic datasets.
+
+The container ships no datasets, so the experiment drivers default to
+class-structured synthetics that preserve the *shape* of the paper's tasks:
+
+* ``make_image_classification`` — CIFAR-like (N, 32, 32, 3) Gaussian-mixture
+  textures. Each class has a low-frequency spatial template plus per-sample
+  texture noise, so that (a) halves of the image are individually informative
+  but (b) the joint image is more informative than either half — the property
+  the paper's toy example (Fig. 4) relies on.
+* ``make_tabular_credit`` — UCI-credit-like (N, 23) correlated features with a
+  logistic label model spanning both parties' feature blocks.
+* ``make_token_stream`` — synthetic token ids for LM smoke tests.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def make_image_classification(
+    key: jax.Array,
+    num_samples: int,
+    num_classes: int = 10,
+    image_size: int = 32,
+    channels: int = 3,
+    template_strength: float = 1.0,
+    cross_half_fraction: float = 0.35,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Class-conditional low-frequency templates + noise.
+
+    ``cross_half_fraction`` of each class template's energy lives in a
+    component that is only label-informative when both halves are observed
+    (an odd/even parity pattern across the vertical midline), mimicking the
+    paper's Fig.-4 phenomenon where one half alone is ambiguous.
+    """
+    k_tmpl, k_cross, k_lbl, k_noise, k_phase = jax.random.split(key, 5)
+    H = W = image_size
+    # Low-frequency per-class template: random coefficients on a 4x4 Fourier-ish
+    # basis, upsampled.
+    coarse = jax.random.normal(k_tmpl, (num_classes, 4, 4, channels))
+    templates = jax.image.resize(coarse, (num_classes, H, W, channels), "bilinear")
+    # Cross-half component: sign-coupled pattern between left and right halves.
+    cross = jax.random.normal(k_cross, (num_classes, H, W // 2, channels))
+    cross_full = jnp.concatenate([cross, cross * ((-1.0) ** jnp.arange(num_classes))[:, None, None, None]], axis=2)
+    templates = (1 - cross_half_fraction) * templates + cross_half_fraction * cross_full
+
+    labels = jax.random.randint(k_lbl, (num_samples,), 0, num_classes)
+    noise = jax.random.normal(k_noise, (num_samples, H, W, channels))
+    x = template_strength * templates[labels] + noise
+    # Normalize to roughly unit scale like standardized CIFAR.
+    x = x / (1.0 + template_strength)
+    return x.astype(jnp.float32), labels.astype(jnp.int32)
+
+
+def make_tabular_credit(
+    key: jax.Array,
+    num_samples: int,
+    num_features: int = 23,
+    num_classes: int = 2,
+    label_noise: float = 0.05,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Correlated features; the label depends on features from BOTH parties'
+    blocks (first 10 / rest), matching the FATE split used by the paper."""
+    k_mix, k_x, k_w, k_flip = jax.random.split(key, 4)
+    # Correlated features: x = z @ M with a random mixing matrix.
+    latent = jax.random.normal(k_x, (num_samples, num_features))
+    mix = jax.random.normal(k_mix, (num_features, num_features)) / jnp.sqrt(num_features)
+    mix = mix + 0.5 * jnp.eye(num_features)
+    x = latent @ mix
+    w = jax.random.normal(k_w, (num_features,))
+    logits = x @ w + 0.25 * (x[:, 2] * x[:, 12])  # cross-party interaction
+    if num_classes == 2:
+        y = (logits > jnp.median(logits)).astype(jnp.int32)
+    else:
+        qs = jnp.quantile(logits, jnp.linspace(0, 1, num_classes + 1)[1:-1])
+        y = jnp.sum(logits[:, None] > qs[None, :], axis=1).astype(jnp.int32)
+    flip = jax.random.bernoulli(k_flip, label_noise, (num_samples,))
+    y = jnp.where(flip, (y + 1) % num_classes, y)
+    return x.astype(jnp.float32), y
+
+
+def make_token_stream(
+    key: jax.Array, batch: int, seq_len: int, vocab_size: int
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Synthetic LM batch: Zipf-ish token ids; labels = next token."""
+    k1, = jax.random.split(key, 1)
+    # Zipf via exponentiated uniform — cheap and deterministic.
+    u = jax.random.uniform(k1, (batch, seq_len + 1), minval=1e-6, maxval=1.0)
+    ids = jnp.clip((u ** (-0.7) - 1.0).astype(jnp.int32), 0, vocab_size - 1)
+    return ids[:, :-1], ids[:, 1:]
+
+
+def make_sequence_classification(
+    key: jax.Array, num_samples: int, seq_len: int = 32, vocab_size: int = 64,
+    num_classes: int = 4, topic_strength: float = 0.5
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Token sequences whose class is a 'topic': each class over-samples a
+    class-specific token subset, spread across the WHOLE sequence so both
+    sequence-halves are informative (the VFL-on-LM scenario)."""
+    k_topic, k_lbl, k_tok, k_mix = jax.random.split(key, 4)
+    topics = jax.random.randint(k_topic, (num_classes, vocab_size // 4), 1,
+                                vocab_size)
+    labels = jax.random.randint(k_lbl, (num_samples,), 0, num_classes)
+    base = jax.random.randint(k_tok, (num_samples, seq_len), 1, vocab_size)
+    pick = jax.random.randint(k_mix, (num_samples, seq_len), 0,
+                              vocab_size // 4)
+    topic_tok = topics[labels][jnp.arange(num_samples)[:, None], pick]
+    use_topic = jax.random.bernoulli(k_mix, topic_strength,
+                                     (num_samples, seq_len))
+    return jnp.where(use_topic, topic_tok, base).astype(jnp.int32), labels
+
+
+def numpy_train_test_split(x, y, test_fraction: float = 0.2, seed: int = 0):
+    n = x.shape[0]
+    rng = np.random.RandomState(seed)
+    perm = rng.permutation(n)
+    n_test = int(n * test_fraction)
+    te, tr = perm[:n_test], perm[n_test:]
+    return (jnp.asarray(x)[tr], jnp.asarray(y)[tr]), (jnp.asarray(x)[te], jnp.asarray(y)[te])

@@ -1,0 +1,27 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+* ``kmeans``          — pairwise-distance + argmin assignment (step ③).
+* ``sdpa_estimator``  — flash-style blocked SDPA representation estimation
+                        (Eq. 10, the few-shot server hot-spot: N_u ≫ N_o).
+* ``decode_attention`` — GQA flash-decode for the serving stack of the
+                        assigned architectures.
+* ``rmsnorm``         — fused RMSNorm (two per layer in every assigned
+                        arch; memory-bound floor of 1R+1W per element).
+
+Each kernel directory has kernel.py (pl.pallas_call + BlockSpec), ops.py
+(jit'd public wrapper with padding/dtype plumbing) and ref.py (pure-jnp
+oracle used by the tests' assert_allclose sweeps).
+
+Kernels run in interpret mode on CPU (``REPRO_KERNEL_INTERPRET=1`` or
+automatically when no TPU is present); on TPU they compile natively.
+"""
+import os
+
+import jax
+
+
+def interpret_mode() -> bool:
+    env = os.environ.get("REPRO_KERNEL_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: GQA flash-decode (one query token vs a long KV cache).
+
+Decode attention at seq 32k-500k is memory-bound: the whole KV cache streams
+HBM→VMEM once per step while compute is a (G, dh)·(dh, BS) matvec-batch per
+block. The kernel keeps the online-softmax running state (m, l, acc) for the
+G grouped query heads in VMEM scratch and walks the cache in BS-sized blocks,
+so HBM traffic is exactly |KV| bytes — the roofline floor.
+
+Grid: (B, Hkv, S/BS); (batch, kv-head) axes parallel, cache-block axis is the
+sequential reduction. q rows for one kv head = the G query heads of its group
+(G = H/Hkv ≥ 1), padded to the 8-sublane minimum by ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _decode_kernel(s_valid: int, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref):
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+    bs = k_ref.shape[2]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)      # (G, dh), pre-scaled by 1/√dh
+    k = k_ref[0, 0].astype(jnp.float32)      # (BS, dh)
+    v = v_ref[0, 0].astype(jnp.float32)      # (BS, dh)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (G, BS)
+    col = j * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(col < s_valid, s, _NEG_INF)
+
+    m_prev = m_ref[..., :1]
+    l_prev = l_ref[..., :1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(j == nj - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / l_ref[..., :1]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("s_valid", "block_s", "interpret"))
+def decode_attention_padded(q: jnp.ndarray, k_cache: jnp.ndarray,
+                            v_cache: jnp.ndarray, s_valid: int,
+                            block_s: int = 512, interpret: bool = False
+                            ) -> jnp.ndarray:
+    """q (B, Hkv, G, dh) pre-scaled; caches (B, Hkv, S, dh); S % block_s == 0."""
+    b, hkv, g, dh = q.shape
+    s = k_cache.shape[2]
+    assert s % block_s == 0
+    grid = (b, hkv, s // block_s)
+    kernel = functools.partial(_decode_kernel, s_valid)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, dh), lambda b_, h_, j_: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, block_s, dh), lambda b_, h_, j_: (b_, h_, j_, 0)),
+            pl.BlockSpec((1, 1, block_s, dh), lambda b_, h_, j_: (b_, h_, j_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh), lambda b_, h_, j_: (b_, h_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_cache, v_cache)

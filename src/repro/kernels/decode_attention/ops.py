@@ -1,0 +1,45 @@
+"""Public wrapper: GQA grouping, padding, block sizing."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import interpret_mode
+from repro.kernels.decode_attention.kernel import decode_attention_padded
+
+_LANE = 128
+_SUBLANE = 8
+_VMEM_BUDGET = 12 * 2**20
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray
+                     ) -> jnp.ndarray:
+    """q (B, H, dh), caches (B, Hkv, S, dh) → (B, H, dh) f32."""
+    b, h, dh = q.shape
+    _, hkv, s, _ = k_cache.shape
+    assert h % hkv == 0
+    g = h // hkv
+
+    dh_pad = _round_up(max(dh, _LANE), _LANE)
+    g_pad = _round_up(max(g, _SUBLANE), _SUBLANE)
+    # block_s sized to the VMEM budget: k + v blocks dominate
+    block_s = 512
+    while 4 * (2 * block_s * dh_pad + 2 * g_pad * dh_pad + g_pad * block_s) > _VMEM_BUDGET:
+        block_s //= 2
+    block_s = max(block_s, _SUBLANE)
+    s_pad = _round_up(max(s, block_s), block_s)
+
+    scale = 1.0 / (dh ** 0.5)
+    qg = (q.astype(jnp.float32) * scale).reshape(b, hkv, g, dh)
+    qp = jnp.zeros((b, hkv, g_pad, dh_pad), jnp.float32).at[:, :, :g, :dh].set(qg)
+    kp = jnp.zeros((b, hkv, s_pad, dh_pad), jnp.float32).at[:, :, :s, :dh].set(
+        k_cache.astype(jnp.float32))
+    vp = jnp.zeros((b, hkv, s_pad, dh_pad), jnp.float32).at[:, :, :s, :dh].set(
+        v_cache.astype(jnp.float32))
+
+    out = decode_attention_padded(qp, kp, vp, s_valid=s, block_s=block_s,
+                                  interpret=interpret_mode())
+    return out[:, :, :g, :dh].reshape(b, h, dh)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for GQA flash-decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     lengths: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Single-token GQA attention against a KV cache.
+
+    q:       (B, H, dh)          — one new query token per sequence
+    k_cache: (B, Hkv, S, dh)
+    v_cache: (B, Hkv, S, dh)
+    lengths: (B,) int32 valid-prefix lengths (None → all S valid)
+    returns  (B, H, dh) f32
+    """
+    b, h, dh = q.shape
+    _, hkv, s, _ = k_cache.shape
+    g = h // hkv
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, dh)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bksd->bkgs", qf, kf) / jnp.sqrt(
+        jnp.asarray(dh, jnp.float32))
+    if lengths is not None:
+        mask = jnp.arange(s)[None, None, None, :] < lengths[:, None, None, None]
+        scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", p, vf)
+    return out.reshape(b, h, dh)

@@ -1,0 +1,3 @@
+from repro.kernels.kmeans import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,46 @@
+"""Public jit'd wrapper: padding, VMEM-budget block sizing, dtype plumbing."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import interpret_mode
+from repro.kernels.kmeans.kernel import kmeans_assign_padded
+
+_LANE = 128     # MXU/VREG lane width
+_SUBLANE = 8
+_VMEM_BUDGET = 12 * 2**20   # leave headroom under ~16 MB/core
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def _pick_block_n(d_pad: int, c_pad: int) -> int:
+    for bn in (512, 256, 128, 64, 32, 16, 8):
+        vmem = 4 * (bn * d_pad + c_pad * d_pad + 2 * bn * c_pad)
+        if vmem <= _VMEM_BUDGET:
+            return bn
+    return 8
+
+
+def kmeans_assign(x: jnp.ndarray, centers: jnp.ndarray) -> jnp.ndarray:
+    """argmin_c ‖x_i − μ_c‖² via the Pallas kernel. Any N, d, C."""
+    n, d = x.shape
+    c = centers.shape[0]
+    d_pad = _round_up(max(d, _LANE), _LANE)
+    c_pad = _round_up(max(c, _SUBLANE), _SUBLANE)
+    bn = _pick_block_n(d_pad, c_pad)
+    n_pad = _round_up(max(n, bn), bn)
+
+    xp = jnp.zeros((n_pad, d_pad), jnp.float32).at[:n, :d].set(x.astype(jnp.float32))
+    # Sentinel rows: huge coordinates → huge distance → never the argmin.
+    cp = jnp.full((c_pad, d_pad), 0.0, jnp.float32)
+    cp = cp.at[:c, :d].set(centers.astype(jnp.float32))
+    if c_pad > c:
+        cp = cp.at[c:, 0].set(3e18)
+
+    out = kmeans_assign_padded(xp, cp, block_n=bn, interpret=interpret_mode())
+    return out[:n]

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the k-means assignment kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def kmeans_assign(x: jnp.ndarray, centers: jnp.ndarray) -> jnp.ndarray:
+    """argmin_c ‖x_i - μ_c‖²  →  (N,) int32.
+
+    x: (N, d) float; centers: (C, d) float.
+    """
+    x = x.astype(jnp.float32)
+    centers = centers.astype(jnp.float32)
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)
+    c2 = jnp.sum(centers * centers, axis=1)
+    d = x2 - 2.0 * (x @ centers.T) + c2[None, :]
+    return jnp.argmin(d, axis=1).astype(jnp.int32)
+
+
+def kmeans_min_dist(x: jnp.ndarray, centers: jnp.ndarray) -> jnp.ndarray:
+    x = x.astype(jnp.float32)
+    centers = centers.astype(jnp.float32)
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)
+    c2 = jnp.sum(centers * centers, axis=1)
+    d = x2 - 2.0 * (x @ centers.T) + c2[None, :]
+    return jnp.min(d, axis=1)

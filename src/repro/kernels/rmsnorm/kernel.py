@@ -1,0 +1,45 @@
+"""Pallas TPU kernel: fused RMSNorm.
+
+Every block of every assigned architecture norms twice per layer; unfused,
+XLA materializes the f32 upcast and the variance reduction separately. The
+kernel keeps one (BR, d) row-tile in VMEM, does the square-mean reduction in
+VREGs and writes the scaled result in the input dtype — one HBM read + one
+write per element, the memory-bound floor.
+
+Grid walks row blocks; d is padded to the 128-lane width by ops.py with the
+mean computed over the TRUE d (passed statically).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(d_true, x_ref, s_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)                 # (BR, d_pad)
+    # padded lanes are zero → sum is over true lanes; divide by TRUE d
+    var = jnp.sum(x * x, axis=-1, keepdims=True) / d_true
+    y = x * jax.lax.rsqrt(var + 1e-6)
+    o_ref[...] = (y * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("d_true", "block_rows", "interpret"))
+def rms_norm_padded(x: jnp.ndarray, scale: jnp.ndarray, d_true: int,
+                    block_rows: int = 256, interpret: bool = False) -> jnp.ndarray:
+    n, d = x.shape
+    assert n % block_rows == 0
+    kernel = functools.partial(_kernel, d_true)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=interpret,
+    )(x, scale)

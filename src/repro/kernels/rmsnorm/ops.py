@@ -1,0 +1,36 @@
+"""Public wrapper: flatten leading dims, pad rows/lanes, dispatch."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import interpret_mode
+from repro.kernels.rmsnorm.kernel import rms_norm_padded
+
+_LANE = 128
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """x: (..., d); scale (d,). eps fixed at 1e-6 inside the kernel."""
+    del eps
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    n = 1
+    for s in orig_shape[:-1]:
+        n *= s
+    x2 = x.reshape(n, d)
+
+    d_pad = _round_up(max(d, _LANE), _LANE)
+    block = 256
+    while block > 8 and 4 * (2 * block * d_pad + d_pad) > 12 * 2**20:
+        block //= 2
+    n_pad = _round_up(max(n, block), block)
+
+    xp = jnp.zeros((n_pad, d_pad), x.dtype).at[:n, :d].set(x2)
+    sp = jnp.zeros((1, d_pad), scale.dtype).at[0, :d].set(scale)
+    out = rms_norm_padded(xp, sp, d_true=d, block_rows=block,
+                          interpret=interpret_mode())
+    return out[:n, :d].reshape(orig_shape)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for fused RMSNorm."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """x: (..., d); scale: (d,). Returns x/rms(x)·scale in x.dtype."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.sdpa_estimator import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: flash-style blocked SDPA representation estimation.
+
+The few-shot server evaluates Ĥ_u = softmax(H_u H_oᵀ/√d) H_o^B with
+N_u ≫ N_o (every client's full private pool attends over the overlap set).
+Materializing the (N_u, N_o) score matrix in HBM is the naive cost; the
+kernel streams key/value blocks through VMEM with an online softmax so the
+score tile only ever lives in VREGs/VMEM — the standard FlashAttention
+recurrence adapted to this asymmetric (cross-attention, no causality, no
+multi-head) shape.
+
+Grid: (N_u/BU, N_o/BO); the u-axis is parallel, the o-axis is a sequential
+reduction carried in VMEM scratch (m, l, acc). Block shapes are MXU-aligned
+multiples of (8, 128); ops.py pads inputs and picks BU/BO under the VMEM
+budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _sdpa_kernel(no_valid: int,
+                 q_ref, k_ref, v_ref, o_ref,
+                 m_ref, l_ref, acc_ref):
+    """q is pre-scaled by 1/√d in ops.py (python-float closure constants are
+    rejected by pallas_call, and pre-scaling saves a VPU pass anyway)."""
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+    bo = k_ref.shape[0]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32)                  # (BU, d)
+    k = k_ref[...].astype(jnp.float32)                  # (BO, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (BU, BO)
+    col = j * bo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(col < no_valid, s, _NEG_INF)
+
+    m_prev = m_ref[..., :1]                             # (BU, 1)
+    l_prev = l_ref[..., :1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)                              # (BU, BO)
+    alpha = jnp.exp(m_prev - m_new)                     # (BU, 1)
+    l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+    pv = jax.lax.dot_general(p, v_ref[...].astype(jnp.float32),
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (BU, db)
+    acc_ref[...] = acc_ref[...] * alpha + pv
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(j == nj - 1)
+    def _finish():
+        o_ref[...] = (acc_ref[...] / l_ref[..., :1]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("no_valid", "block_u", "block_o", "interpret"))
+def sdpa_estimate_padded(h_u: jnp.ndarray, h_o_a: jnp.ndarray, h_o_b: jnp.ndarray,
+                         no_valid: int,
+                         block_u: int = 256, block_o: int = 256,
+                         interpret: bool = False) -> jnp.ndarray:
+    """h_u must already be scaled by 1/√d_true."""
+    nu, d = h_u.shape
+    no, db = h_o_b.shape
+    assert nu % block_u == 0 and no % block_o == 0
+    grid = (nu // block_u, no // block_o)
+    kernel = functools.partial(_sdpa_kernel, no_valid)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_u, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_o, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_o, db), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_u, db), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nu, db), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_u, 128), jnp.float32),   # m
+            pltpu.VMEM((block_u, 128), jnp.float32),   # l
+            pltpu.VMEM((block_u, db), jnp.float32),    # acc
+        ],
+        interpret=interpret,
+    )(h_u, h_o_a, h_o_b)

@@ -1,0 +1,51 @@
+"""Public wrapper: padding, block sizing, the √d scale from the TRUE dim."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import interpret_mode
+from repro.kernels.sdpa_estimator.kernel import sdpa_estimate_padded
+
+_LANE = 128
+_VMEM_BUDGET = 12 * 2**20
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def _pick_blocks(d_pad: int, db_pad: int):
+    for b in (512, 256, 128, 64, 32, 16, 8):
+        # q + k + v + acc + m/l + out tiles, f32
+        vmem = 4 * (b * d_pad + b * d_pad + b * db_pad + b * db_pad
+                    + 2 * b * 128 + b * db_pad + b * b)
+        if vmem <= _VMEM_BUDGET:
+            return b, b
+    return 8, 8
+
+
+def sdpa_estimate(h_u: jnp.ndarray, h_o_a: jnp.ndarray, h_o_b: jnp.ndarray
+                  ) -> jnp.ndarray:
+    """Eq. 10 via the Pallas kernel. Any shapes; returns (N_u, d_b) f32."""
+    nu, d = h_u.shape
+    no, d2 = h_o_a.shape
+    assert d == d2, (d, d2)
+    db = h_o_b.shape[1]
+    assert h_o_b.shape[0] == no
+
+    d_pad = _round_up(max(d, _LANE), _LANE)
+    db_pad = _round_up(max(db, _LANE), _LANE)
+    bu, bo = _pick_blocks(d_pad, db_pad)
+    nu_pad = _round_up(max(nu, bu), bu)
+    no_pad = _round_up(max(no, bo), bo)
+
+    scale = 1.0 / (d ** 0.5)   # √d of the TRUE dim, not the padded one
+    qp = jnp.zeros((nu_pad, d_pad), jnp.float32).at[:nu, :d].set(
+        h_u.astype(jnp.float32) * scale)
+    kp = jnp.zeros((no_pad, d_pad), jnp.float32).at[:no, :d].set(h_o_a.astype(jnp.float32))
+    vp = jnp.zeros((no_pad, db_pad), jnp.float32).at[:no, :db].set(h_o_b.astype(jnp.float32))
+
+    out = sdpa_estimate_padded(qp, kp, vp, no_valid=no,
+                               block_u=bu, block_o=bo,
+                               interpret=interpret_mode())
+    return out[:nu, :db]

@@ -1,0 +1,24 @@
+"""Production mesh construction (functions only — importing this module never
+touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e pod meshes: 16×16 = 256 chips per pod; 2 pods = 512 chips.
+
+    Axes: ``data`` (batch/fsdp) × ``model`` (tensor/expert). The multi-pod
+    mesh adds a leading ``pod`` axis — in the VFL mapping each pod is one
+    party (DESIGN.md §3), and only the one-shot protocol's rep/grad
+    exchanges cross it.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(devices_per_axis=(2, 2)):
+    """Small host mesh for CI-sized sharding tests."""
+    axes = ("data", "model") if len(devices_per_axis) == 2 else ("pod", "data", "model")
+    return jax.make_mesh(tuple(devices_per_axis), axes)

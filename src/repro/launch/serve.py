@@ -1,0 +1,71 @@
+"""Batched serving driver: prefill a prompt batch, then decode greedily.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma-7b --reduce \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.launch import specs as SP
+from repro.launch.steps import make_decode_step
+from repro.models.model_zoo import build_model
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default="gemma-7b")
+    ap.add_argument("--reduce", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduce:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    key, kp, kt = jax.random.split(key, 3)
+    params = model.init(kp)
+
+    b = args.batch
+    cache_len = args.prompt_len + args.gen
+    cache = SP.zeros_like_spec(model.cache_shapes(b, cache_len))
+    decode = jax.jit(make_decode_step(model), donate_argnums=(1,))
+
+    prompt = jax.random.randint(kt, (b, args.prompt_len), 0, cfg.vocab_size)
+    if cfg.family == "audio":
+        key, ke = jax.random.split(key)
+        from repro.models.model_zoo import _encode
+        emb = 0.02 * jax.random.normal(ke, (b, cfg.prefix_tokens, cfg.d_model))
+        cache["enc_out"] = _encode(params, cfg, emb).astype(cache["enc_out"].dtype)
+
+    # prefill by stepping the decoder over the prompt (cache-exact; a bulk
+    # prefill_fn path exists for throughput benchmarking)
+    t0 = time.time()
+    tok = prompt[:, :1]
+    for t in range(args.prompt_len):
+        batch = {"token": prompt[:, t:t + 1],
+                 "pos": jnp.full((b, 1), t, jnp.int32)}
+        logits, cache = decode(params, cache, batch)
+    generated = []
+    for t in range(args.prompt_len, cache_len):
+        tok = jnp.argmax(logits, axis=-1)[:, None]
+        generated.append(tok)
+        batch = {"token": tok, "pos": jnp.full((b, 1), t, jnp.int32)}
+        logits, cache = decode(params, cache, batch)
+    out = jnp.concatenate(generated, axis=1)
+    dt = time.time() - t0
+    print(f"arch={cfg.name} generated {out.shape} in {dt:.2f}s "
+          f"({b * cache_len / dt:.1f} tok/s)")
+    print("sample:", out[0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,182 @@
+"""Partition-spec assignment for parameter / optimizer / activation trees.
+
+Baseline policy (the §Perf hillclimb iterates from here):
+
+* Parameters: 2D tensor-parallel × FSDP — for each leaf the largest
+  divisible dim is sharded over ``model`` and the next largest divisible dim
+  over ``data``. Leading layer-stack dims (scan axes) are never sharded.
+  Multi-pod: parameters are replicated across ``pod`` (each pod = one VFL
+  party holding a full copy; batch is pod-split).
+* Batches: global batch over (``pod``, ``data``) when divisible, else
+  ``data``, else replicated. Sequence stays unsharded for train (activations
+  shard over batch); decode caches shard their length dim over ``data`` and
+  head/feature dims over ``model`` via the same largest-dim rule.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# containers whose children carry leading layer-stack dims
+_STACK1 = ("blocks", "enc_blocks", "dec_blocks", "rest")
+_STACK2 = ("super",)
+
+
+def _path_names(path) -> list:
+    names = []
+    for p in path:
+        if hasattr(p, "key"):
+            names.append(str(p.key))
+        elif hasattr(p, "name"):
+            names.append(str(p.name))
+        elif hasattr(p, "idx"):
+            names.append(f"[{p.idx}]")
+    return names
+
+
+def _stack_depth(names: Sequence[str]) -> int:
+    if any(n in _STACK2 for n in names):
+        return 2
+    if any(n in _STACK1 for n in names):
+        return 1
+    return 0
+
+
+def param_spec(names: Sequence[str], shape: Tuple[int, ...], mesh: Mesh,
+               fsdp_only: bool = False, embed_single_axis: bool = False) -> P:
+    """fsdp_only: no tensor-parallel ('model') sharding; the FSDP shard goes
+    on the INPUT (first body) dim so matmul contractions meet a sharded dim
+    on the weight side only — SPMD then all-gathers the (small) weight rather
+    than all-reducing the (huge) activation partial sums (§Perf B3).
+
+    embed_single_axis: embedding/unembedding tables shard the vocab dim over
+    'model' ONLY — sharding d_model over 'data' makes every logits matmul a
+    partial-sum all-reduce of the (B, S, V) tensor (§Perf B3)."""
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_n = axis_sizes.get("model", 1)
+    data_n = axis_sizes.get("data", 1)
+    depth = min(_stack_depth(names), len(shape))
+    body = list(shape[depth:])
+    spec: list = [None] * len(shape)
+    if not body:
+        return P(*spec)
+
+    is_embed = any(n in ("tok", "unembed") for n in names)
+    if is_embed and embed_single_axis:
+        order = sorted(range(len(body)), key=lambda i: -body[i])
+        for i in order:
+            if body[i] % model_n == 0 and body[i] >= model_n:
+                spec[depth + i] = "model"
+                break
+        return P(*spec)
+
+    order = sorted(range(len(body)), key=lambda i: -body[i])
+    used = set()
+    if not fsdp_only:
+        # largest divisible dim → model
+        for i in order:
+            if body[i] % model_n == 0 and body[i] >= model_n:
+                spec[depth + i] = "model"
+                used.add(i)
+                break
+        # next largest divisible dim → data
+        for i in order:
+            if i in used:
+                continue
+            if body[i] % data_n == 0 and body[i] >= data_n:
+                spec[depth + i] = "data"
+                break
+    else:
+        # input-dim-first FSDP
+        for i in list(range(len(body))) :
+            if i not in used and body[i] % data_n == 0 and body[i] >= data_n:
+                spec[depth + i] = "data"
+                break
+    return P(*spec)
+
+
+def shard_params(shapes_tree, mesh: Mesh, fsdp_only_paths: Tuple[str, ...] = (),
+                 embed_single_axis: bool = False):
+    """ShapeDtypeStruct tree → NamedSharding tree (same structure).
+
+    fsdp_only_paths: leaves whose path contains any of these names get
+    data-only input-dim sharding (no tensor parallelism)."""
+    def one(path, leaf):
+        if not hasattr(leaf, "shape") or len(leaf.shape) == 0:
+            return NamedSharding(mesh, P())
+        names = _path_names(path)
+        fsdp_only = any(n in fsdp_only_paths for n in names)
+        return NamedSharding(mesh, param_spec(names, leaf.shape, mesh,
+                                              fsdp_only=fsdp_only,
+                                              embed_single_axis=embed_single_axis))
+
+    return jax.tree_util.tree_map_with_path(one, shapes_tree)
+
+
+def batch_spec(shape: Tuple[int, ...], mesh: Mesh) -> P:
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    pod_n = axis_sizes.get("pod", 1)
+    data_n = axis_sizes.get("data", 1)
+    b = shape[0] if shape else 1
+    spec: list = [None] * len(shape)
+    if len(shape) == 0:
+        return P()
+    if pod_n > 1 and b % (pod_n * data_n) == 0:
+        spec[0] = ("pod", "data")
+    elif b % data_n == 0 and b >= data_n:
+        spec[0] = "data"
+    return P(*spec)
+
+
+def shard_batch(spec_tree, mesh: Mesh):
+    def one(leaf):
+        return NamedSharding(mesh, batch_spec(tuple(leaf.shape), mesh))
+
+    return jax.tree_util.tree_map(one, spec_tree)
+
+
+def cache_spec(names: Sequence[str], shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Decode caches are stacked (stack_dims..., batch, length, heads/feat...).
+
+    Batch dim over (pod,data) when divisible; the largest divisible trailing
+    dim (after the length dim) over ``model``; the length dim is never
+    sharded — it is updated by dynamic_update_slice at token granularity."""
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    pod_n = axis_sizes.get("pod", 1)
+    data_n = axis_sizes.get("data", 1)
+    model_n = axis_sizes.get("model", 1)
+    if len(shape) == 0:
+        return P()
+    depth = min(_stack_depth(names), len(shape) - 1)
+    spec: list = [None] * len(shape)
+    b = shape[depth]
+    if pod_n > 1 and b % (pod_n * data_n) == 0 and b >= pod_n * data_n:
+        spec[depth] = ("pod", "data")
+    elif b % data_n == 0 and b >= data_n:
+        spec[depth] = "data"
+    # trailing feature/head dims (skip the length dim at depth+1)
+    best = None
+    for i in range(len(shape) - 1, depth + 1, -1):
+        if shape[i] % model_n == 0 and shape[i] >= model_n:
+            if best is None or shape[i] > shape[best]:
+                best = i
+    if best is not None:
+        spec[best] = "model"
+    return P(*spec)
+
+
+def shard_cache(shapes_tree, mesh: Mesh):
+    def one(path, leaf):
+        names = _path_names(path)
+        if not hasattr(leaf, "shape") or len(leaf.shape) == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, cache_spec(names, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, shapes_tree)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

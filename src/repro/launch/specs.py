@@ -1,0 +1,62 @@
+"""input_specs — ShapeDtypeStruct stand-ins for every model input.
+
+Provides the per-(arch × input-shape) batch trees for the dry-run (no device
+allocation) and the matching random-batch materializer for smoke tests.
+
+Modality frontends are stubs per the brief: [vlm]/[audio] batches carry
+precomputed patch/frame embeddings of the right shape.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+
+
+def sds(*shape, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def train_specs(cfg: ArchConfig, shape: InputShape) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "vlm":
+        p = cfg.prefix_tokens
+        return {"tokens": sds(b, s - p), "labels": sds(b, s - p),
+                "embeds": sds(b, p, cfg.d_model, dtype=jnp.bfloat16)}
+    if cfg.family == "audio":
+        p = cfg.prefix_tokens
+        return {"tokens": sds(b, s - p), "labels": sds(b, s - p),
+                "embeds": sds(b, p, cfg.d_model, dtype=jnp.bfloat16)}
+    return {"tokens": sds(b, s), "labels": sds(b, s)}
+
+
+def prefill_specs(cfg: ArchConfig, shape: InputShape) -> Dict[str, Any]:
+    spec = train_specs(cfg, shape)
+    spec.pop("labels")
+    return spec
+
+
+def decode_specs(cfg: ArchConfig, shape: InputShape) -> Dict[str, Any]:
+    b = shape.global_batch
+    return {"token": sds(b, 1), "pos": sds(b, 1)}
+
+
+def materialize(key: jax.Array, spec_tree) -> Any:
+    """Random batch matching a spec tree (smoke tests)."""
+    leaves, treedef = jax.tree_util.tree_flatten(spec_tree)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = []
+    for leaf, k in zip(leaves, keys):
+        if jnp.issubdtype(leaf.dtype, jnp.integer):
+            out.append(jax.random.randint(k, leaf.shape, 0, 100).astype(leaf.dtype))
+        else:
+            out.append(jax.random.normal(k, leaf.shape).astype(leaf.dtype) * 0.02)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def zeros_like_spec(spec_tree) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), spec_tree)

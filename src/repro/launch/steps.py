@@ -1,0 +1,77 @@
+"""jit-able train / prefill / decode steps for any ArchConfig."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.configs.base import ArchConfig
+from repro.models.model_zoo import ModelDef
+
+
+def make_optimizer(cfg: ArchConfig, learning_rate: float = 3e-4):
+    if cfg.optimizer == "sgdm":
+        return optim.chain(optim.clip_by_global_norm(1.0),
+                           optim.sgd(learning_rate, momentum=0.9))
+    return optim.chain(optim.clip_by_global_norm(1.0),
+                       optim.adam(learning_rate))
+
+
+def make_train_step(model: ModelDef, tx, num_microbatches: int = 1) -> Callable:
+    """num_microbatches > 1: gradient accumulation via lax.scan — activations
+    for only one microbatch are live at a time (the §Perf memory lever)."""
+    if num_microbatches == 1:
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+            updates, opt_state = tx.update(grads, opt_state, params)
+            params = optim.apply_updates(params, updates)
+            return params, opt_state, loss
+
+        return train_step
+
+    def train_step(params, opt_state, batch):
+        def split(x):
+            b = x.shape[0]
+            assert b % num_microbatches == 0, (b, num_microbatches)
+            return x.reshape((num_microbatches, b // num_microbatches) + x.shape[1:])
+
+        micro = jax.tree_util.tree_map(split, batch)
+
+        def accum(carry, mb):
+            loss_sum, grads_sum = carry
+            loss, grads = jax.value_and_grad(model.loss_fn)(params, mb)
+            grads_sum = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(a.dtype), grads_sum, grads)
+            return (loss_sum + loss, grads_sum), None
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, grads), _ = jax.lax.scan(accum, (jnp.zeros((), jnp.float32), zeros),
+                                            micro)
+        grads = jax.tree_util.tree_map(lambda g: g / num_microbatches, grads)
+        updates, opt_state = tx.update(grads, opt_state, params)
+        params = optim.apply_updates(params, updates)
+        return params, opt_state, loss_sum / num_microbatches
+
+    return train_step
+
+
+def make_prefill_step(model: ModelDef) -> Callable:
+    def prefill_step(params, batch):
+        return model.prefill_fn(params, batch)
+
+    return prefill_step
+
+
+def make_decode_step(model: ModelDef) -> Callable:
+    def decode_step(params, cache, batch):
+        logits, new_cache = model.decode_fn(params, cache, batch)
+        return logits, new_cache
+
+    return decode_step
+
+
+def opt_state_shapes(tx, param_shapes):
+    return jax.eval_shape(tx.init, param_shapes)

@@ -1,0 +1,180 @@
+"""The paper's protocol as a multi-pod collective schedule (DESIGN.md §3).
+
+Each pod is one VFL party: party-private features and extractor weights live
+in that pod (sharded over the pod's own data/model axes); true labels live
+with the "server" which we co-locate with party 0. The *only* tensors that
+may cross the pod axis are the ones the protocol exchanges:
+
+  vanilla VFL   : per training step — all-gather of minibatch representations
+                  (+ the implicit partial-grad return inside the same jitted
+                  step), i.e. Θ(steps) pod-crossing collectives;
+  one-shot VFL  : the whole session is ONE jitted program with exactly three
+                  rep/grad exchanges; all local-SSL iterations run inside a
+                  lax.fori_loop with zero pod-axis communication.
+
+Both schedules are expressed with shard_map over the "pod" axis so the
+dry-run's HLO makes the collective-count difference inspectable — this is
+the paper's 330× communication claim restated in collectives.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.ssl import cross_entropy
+
+
+# --------------------------------------------------------------------------
+# a tiny party-local extractor (MLP) — weights are per-party (leading pod dim)
+# --------------------------------------------------------------------------
+def extractor_shapes(feat_dim: int, hidden: int, rep_dim: int, parties: int):
+    return {
+        "w0": jax.ShapeDtypeStruct((parties, feat_dim, hidden), jnp.float32),
+        "w1": jax.ShapeDtypeStruct((parties, hidden, rep_dim), jnp.float32),
+    }
+
+
+def _extract(wp, x):       # wp: {w0 (f,h), w1 (h,r)}, x (b, f)
+    return jax.nn.relu(x @ wp["w0"]) @ wp["w1"]
+
+
+def make_vanilla_vfl_step(mesh: Mesh, feat_dim: int, hidden: int, rep_dim: int,
+                          num_classes: int, lr: float = 0.01) -> Callable:
+    """One SplitNN iteration: reps all-gather across pods, joint loss, local
+    backprop. Inputs carry a leading party axis sharded over "pod"."""
+    parties = mesh.devices.shape[mesh.axis_names.index("pod")]
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P("pod"), P("pod", "data"), P("data"), P(None, None)),
+        out_specs=(P("pod"), P()),
+        check_rep=False)
+    def step(params, x, y, w_head):
+        # params leaves (1, f, h) locally; x (1, b_local, f)
+        wp = jax.tree_util.tree_map(lambda a: a[0], params)
+        xl = x[0]
+
+        def loss_fn(wp):
+            rep = _extract(wp, xl)                          # (b, r)
+            # ① upload: all-gather representations across parties (pod axis)
+            reps = jax.lax.all_gather(rep, "pod")           # (K, b, r)
+            joint = jnp.moveaxis(reps, 0, 1).reshape(xl.shape[0], -1)
+            logits = joint @ w_head
+            return jnp.mean(cross_entropy(logits, y))
+
+        # ② the partial-grad return is the transpose of the all-gather
+        loss, grads = jax.value_and_grad(loss_fn)(wp)
+        new = jax.tree_util.tree_map(lambda p, g: p - lr * g, wp, grads)
+        new = jax.tree_util.tree_map(lambda a: a[None], new)
+        return new, jnp.array([loss])[0]
+
+    return step
+
+
+def make_oneshot_vfl_session(mesh: Mesh, feat_dim: int, hidden: int,
+                             rep_dim: int, num_classes: int,
+                             local_steps: int, lr: float = 0.01,
+                             rep_dtype=jnp.float32) -> Callable:
+    """The WHOLE one-shot session as one program with exactly 3 pod-axis
+    exchanges: reps up → pseudo-label signal down → refreshed reps up.
+    The k-means/SSL machinery is the full repro.core implementation at host
+    scale; here the schedule is the point — local training is a fori_loop
+    with no collectives inside."""
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P("pod"), P("pod", "data"), P("pod", "data"),
+                  P("data"), P(None, None)),
+        out_specs=(P("pod"), P()),
+        check_rep=False)
+    def session(params, x_o, x_u, y, w_head):
+        wp = jax.tree_util.tree_map(lambda a: a[0], params)
+        xo, xu = x_o[0], x_u[0]
+
+        # ①: upload overlap reps (all-gather = pod exchange #1) — §Perf C:
+        # the exchange payload travels in rep_dtype (bf16 halves inter-pod
+        # bytes; the paper's accounting assumes f32)
+        rep_o = _extract(wp, xo)
+        # optimization_barrier keeps the cast from being folded away by the
+        # excess-precision simplifier — the wire format really is rep_dtype
+        rep_q = jax.lax.optimization_barrier(rep_o.astype(rep_dtype))
+        reps = jax.lax.optimization_barrier(
+            jax.lax.all_gather(rep_q, "pod"))   # exchange 1
+        joint = jnp.moveaxis(reps, 0, 1).reshape(xo.shape[0], -1).astype(jnp.float32)
+
+        # ②: partial gradients of the server loss wrt local reps — computed
+        # where the labels are and returned to each party (exchange #2 is the
+        # transpose of the gather; expressed via psum of the masked grad)
+        def server_loss(j):
+            return jnp.mean(cross_entropy(j @ w_head, y))
+
+        g_joint = jax.grad(server_loss)(joint)              # (b, K·r)
+        my = jax.lax.axis_index("pod")
+        g_local = jax.lax.dynamic_slice_in_dim(g_joint, my * rep_dim, rep_dim, 1)
+        g_q = jax.lax.optimization_barrier(g_local.astype(rep_dtype))
+        g_local = (jax.lax.optimization_barrier(jax.lax.psum(g_q, "pod"))
+                   / jax.lax.psum(1, "pod")).astype(jnp.float32)  # exchange 2
+
+        # ③: pseudo-labels from the gradient signal (sign-projection proxy of
+        # the k-means step — same information content, jit-static shape)
+        pseudo = jnp.argmax(g_local @ jax.random.normal(
+            jax.random.PRNGKey(0), (rep_dim, num_classes)), axis=-1)
+
+        # ④: LOCAL SSL — zero pod-axis collectives inside this loop
+        def local_step(i, wp):
+            def ssl_loss(wp):
+                z_o = _extract(wp, xo)
+                logit_o = z_o @ jax.random.normal(jax.random.PRNGKey(1),
+                                                  (rep_dim, num_classes))
+                l_s = jnp.mean(cross_entropy(logit_o, pseudo))
+                z_u = _extract(wp, xu)
+                l_u = jnp.mean(jnp.square(z_u - jax.lax.stop_gradient(
+                    jnp.roll(z_u, 1, axis=0))))             # consistency proxy
+                return l_s + 0.1 * l_u
+            g = jax.grad(ssl_loss)(wp)
+            return jax.tree_util.tree_map(lambda p, gg: p - lr * gg, wp, g)
+
+        wp = jax.lax.fori_loop(0, local_steps, local_step, wp)
+
+        # ⑤: refreshed overlap reps up (exchange #3)
+        rep_o2 = _extract(wp, xo)
+        rep2_q = jax.lax.optimization_barrier(rep_o2.astype(rep_dtype))
+        reps2 = jax.lax.optimization_barrier(
+            jax.lax.all_gather(rep2_q, "pod"))  # exchange 3
+        joint2 = jnp.moveaxis(reps2, 0, 1).reshape(xo.shape[0], -1).astype(jnp.float32)
+        final_loss = jnp.mean(cross_entropy(joint2 @ w_head, y))
+
+        wp = jax.tree_util.tree_map(lambda a: a[None], wp)
+        return wp, final_loss
+
+    return session
+
+
+def count_pod_collectives(compiled_text: str, parties: int = 2) -> Dict[str, int]:
+    """Count collectives (and their payload bytes) whose replica groups span
+    pods, vs pod-internal ones."""
+    import re
+    dtype_bytes = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "pred": 1}
+    pod_crossing = 0
+    internal = 0
+    crossing_bytes = 0
+    for m in re.finditer(
+            r"= ([a-z0-9]+)\[([0-9,]*)\][^\n]*?(all-gather|all-reduce|"
+            r"reduce-scatter|all-to-all|collective-permute)[^\n]*"
+            r"replica_groups=\{\{([0-9,]+)", compiled_text):
+        dt, dims, kind, group_s = m.groups()
+        group = [int(v) for v in group_s.split(",")]
+        if len(group) >= 2 and max(group) - min(group) >= 256:
+            pod_crossing += 1
+            n = 1
+            for d in (dims.split(",") if dims else []):
+                n *= int(d)
+            crossing_bytes += n * dtype_bytes.get(dt, 4)
+        else:
+            internal += 1
+    return {"pod_crossing": pod_crossing, "pod_internal": internal,
+            "pod_crossing_bytes": crossing_bytes}

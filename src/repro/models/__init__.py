@@ -1,0 +1,8 @@
+from repro.models.extractors import (
+    Model,
+    make_classifier,
+    make_cnn_extractor,
+    make_mlp_extractor,
+)
+
+__all__ = ["Model", "make_classifier", "make_cnn_extractor", "make_mlp_extractor"]

@@ -1,0 +1,166 @@
+"""Per-party representation extractors f_k and server classifiers f_c.
+
+Functional API used throughout the repo:
+
+    model = make_cnn_extractor(rep_dim=128)
+    params = model.init(key, sample_input)
+    reps   = model.apply(params, x, train=True)
+
+The image extractor is a WideResNet-style residual CNN (GroupNorm instead of
+BatchNorm so the model stays a pure function of (params, x) — no mutable
+running statistics; this is the standard TPU/functional adaptation and noted
+in DESIGN.md §7). The paper uses WideResNet20; depth/width are configurable
+and the default matches that scale class on half-images.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Model:
+    init: Callable[..., Any]
+    apply: Callable[..., jnp.ndarray]
+    rep_dim: int
+
+
+# ---------------------------------------------------------------- helpers --
+def _he(key, shape, fan_in):
+    return jax.random.normal(key, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _group_norm(x, scale, bias, groups=8, eps=1e-5):
+    n, h, w, c = x.shape
+    g = math.gcd(groups, c)
+    xg = x.reshape(n, h, w, g, c // g)
+    mean = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + eps)
+    return xg.reshape(n, h, w, c) * scale + bias
+
+
+# ---------------------------------------------------------- CNN extractor --
+def make_cnn_extractor(rep_dim: int = 128, widths: Sequence[int] = (32, 64, 128),
+                       blocks_per_stage: int = 2) -> Model:
+    """WideResNet-style residual CNN for (N, H, W, C) inputs."""
+
+    def init(key, sample):
+        c_in = sample.shape[-1]
+        params: Dict[str, Any] = {}
+        key, k0 = jax.random.split(key)
+        params["stem"] = _he(k0, (3, 3, c_in, widths[0]), 9 * c_in)
+        prev = widths[0]
+        for s, width in enumerate(widths):
+            for b in range(blocks_per_stage):
+                key, k1, k2, k3 = jax.random.split(key, 4)
+                pfx = f"s{s}b{b}"
+                params[pfx] = {
+                    "conv1": _he(k1, (3, 3, prev, width), 9 * prev),
+                    "conv2": _he(k2, (3, 3, width, width), 9 * width),
+                    "gn1_scale": jnp.ones((prev,)), "gn1_bias": jnp.zeros((prev,)),
+                    "gn2_scale": jnp.ones((width,)), "gn2_bias": jnp.zeros((width,)),
+                }
+                if prev != width:
+                    params[pfx]["proj"] = _he(k3, (1, 1, prev, width), prev)
+                prev = width
+        key, kh = jax.random.split(key)
+        params["head_w"] = _he(kh, (prev, rep_dim), prev)
+        params["head_b"] = jnp.zeros((rep_dim,))
+        params["out_gn_scale"] = jnp.ones((prev,))
+        params["out_gn_bias"] = jnp.zeros((prev,))
+        return params
+
+    def apply(params, x, train: bool = False):
+        del train  # no dropout/BN state — augmentation happens in the data path
+        h = _conv(x, params["stem"])
+        for s in range(len(widths)):
+            for b in range(blocks_per_stage):
+                p = params[f"s{s}b{b}"]
+                stride = 2 if (b == 0 and s > 0) else 1
+                y = _group_norm(h, p["gn1_scale"], p["gn1_bias"])
+                y = jax.nn.relu(y)
+                shortcut = h
+                if "proj" in p:
+                    shortcut = _conv(y, p["proj"], stride=stride)
+                elif stride != 1:
+                    shortcut = h[:, ::stride, ::stride, :]
+                y = _conv(y, p["conv1"], stride=stride)
+                y = _group_norm(y, p["gn2_scale"], p["gn2_bias"])
+                y = jax.nn.relu(y)
+                y = _conv(y, p["conv2"])
+                h = shortcut + y
+        h = jax.nn.relu(_group_norm(h, params["out_gn_scale"], params["out_gn_bias"]))
+        h = h.mean(axis=(1, 2))  # global average pool
+        return h @ params["head_w"] + params["head_b"]
+
+    return Model(init=init, apply=apply, rep_dim=rep_dim)
+
+
+# ---------------------------------------------------------- MLP extractor --
+def make_mlp_extractor(rep_dim: int = 64, hidden: Sequence[int] = (128, 128)) -> Model:
+    """Two-layer-style MLP for tabular parties (the paper's credit model)."""
+
+    dims_hidden = tuple(hidden)
+
+    def init(key, sample):
+        d = sample.shape[-1]
+        dims = (d,) + dims_hidden + (rep_dim,)
+        params = {}
+        for i in range(len(dims) - 1):
+            key, k = jax.random.split(key)
+            params[f"w{i}"] = _he(k, (dims[i], dims[i + 1]), dims[i])
+            params[f"b{i}"] = jnp.zeros((dims[i + 1],))
+        return params
+
+    def apply(params, x, train: bool = False):
+        del train
+        n_layers = len([k for k in params if k.startswith("w")])
+        h = x
+        for i in range(n_layers):
+            h = h @ params[f"w{i}"] + params[f"b{i}"]
+            if i < n_layers - 1:
+                h = jax.nn.relu(h)
+        return h
+
+    return Model(init=init, apply=apply, rep_dim=rep_dim)
+
+
+# --------------------------------------------------------- server classifier
+def make_classifier(num_classes: int, hidden: Sequence[int] = ()) -> Model:
+    """Server-side f_c over concatenated representations (linear by default,
+    matching SplitNN-style heads; optional MLP)."""
+
+    dims_hidden = tuple(hidden)
+
+    def init(key, sample):
+        d = sample.shape[-1]
+        dims = (d,) + dims_hidden + (num_classes,)
+        params = {}
+        for i in range(len(dims) - 1):
+            key, k = jax.random.split(key)
+            params[f"w{i}"] = _he(k, (dims[i], dims[i + 1]), dims[i])
+            params[f"b{i}"] = jnp.zeros((dims[i + 1],))
+        return params
+
+    def apply(params, x, train: bool = False):
+        del train
+        n_layers = len([k for k in params if k.startswith("w")])
+        h = x
+        for i in range(n_layers):
+            h = h @ params[f"w{i}"] + params[f"b{i}"]
+            if i < n_layers - 1:
+                h = jax.nn.relu(h)
+        return h
+
+    return Model(init=init, apply=apply, rep_dim=num_classes)

@@ -1,0 +1,405 @@
+"""Shared transformer building blocks (pure functional, shape-declared).
+
+Every module declares its parameters as a nested dict of
+``jax.ShapeDtypeStruct`` (so the multi-pod dry-run can lower without ever
+allocating weights) and applies them with a pure function. ``init_params``
+materializes any shape tree for the CPU smoke tests / examples.
+
+Attention is *blocked* (flash-style lax.scan over KV chunks with an online
+softmax) so that train/prefill never materialize an (S, S) score matrix —
+XLA does not perform this fusion on its own and a 32k×32k score tensor per
+head would dwarf HBM. This is the pure-JAX analogue of the Pallas kernels in
+repro.kernels and is what the dry-run lowers; on real TPU the Pallas path
+can be swapped in per layer.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+Shapes = Dict[str, Any]
+
+
+def sds(*shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ------------------------------------------------------------------- init --
+def init_params(key: jax.Array, shapes, base_std: float = 0.02):
+    """Materialize a ShapeDtypeStruct tree: *scale→1, *bias→0, else N(0,σ)."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = []
+    for (path, leaf), k in zip(leaves, keys):
+        name = str(path[-1])
+        if "scale" in name:
+            out.append(jnp.ones(leaf.shape, leaf.dtype))
+        elif "bias" in name or name.endswith("_b']") or "conv_b" in name:
+            out.append(jnp.zeros(leaf.shape, leaf.dtype))
+        elif "A_log" in name:
+            out.append(jnp.log(jnp.linspace(1.0, 16.0, leaf.shape[-1], dtype=jnp.float32))
+                       .astype(leaf.dtype) if leaf.ndim == 1 else
+                       jnp.zeros(leaf.shape, leaf.dtype))
+        else:
+            out.append((base_std * jax.random.normal(k, leaf.shape)).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ------------------------------------------------------------------- norm --
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dtype)
+
+
+# ------------------------------------------------------------------- rope --
+def _rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, dh); positions: broadcastable to (..., S). Split-half."""
+    dh = x.shape[-1]
+    freqs = _rope_freqs(dh, theta)                       # (dh/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (..., S, 1, dh/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, theta: float,
+                sections: Tuple[int, int, int] = (1, 1, 2)) -> jnp.ndarray:
+    """Qwen2-VL M-RoPE: the dh/2 frequency dims are split into
+    temporal/height/width sections, each rotated by its own position stream.
+
+    x: (..., S, H, dh); positions3: (3, ..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    sec = [half * s // sum(sections) for s in sections]
+    sec[-1] = half - sec[0] - sec[1]
+    freqs = _rope_freqs(dh, theta)                       # (half,)
+    # per-frequency position stream id: [t]*sec0 + [h]*sec1 + [w]*sec2
+    stream = jnp.concatenate([
+        jnp.zeros((sec[0],), jnp.int32),
+        jnp.ones((sec[1],), jnp.int32),
+        jnp.full((sec[2],), 2, jnp.int32)])
+    pos = jnp.take(positions3, stream, axis=0)           # (half, ..., S) via axis-0 gather
+    pos = jnp.moveaxis(pos, 0, -1)                       # (..., S, half)
+    angles = pos[..., :, None, :].astype(jnp.float32) * freqs   # (..., S, 1, half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------------- ffn --
+def ffn_shapes(cfg: ArchConfig, d_ff: Optional[int] = None) -> Shapes:
+    d, f = cfg.d_model, d_ff if d_ff is not None else cfg.d_ff
+    if cfg.activation in ("swiglu", "geglu"):
+        return {"w_gate": sds(d, f), "w_up": sds(d, f), "w_down": sds(f, d)}
+    return {"w_up": sds(d, f), "w_down": sds(f, d)}
+
+
+def ffn_apply(params: Shapes, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    elif cfg.activation == "geglu":
+        h = jax.nn.gelu(x @ params["w_gate"]) * (x @ params["w_up"])
+    else:  # gelu
+        h = jax.nn.gelu(x @ params["w_up"])
+    return h @ params["w_down"]
+
+
+# -------------------------------------------------------- blocked attention --
+def _attend_block_scan(q, k, v, q_pos, k_pos, window: Optional[int],
+                       causal: bool, kv_chunk: int,
+                       shard_heads: bool = False):
+    """Online-softmax attention, scanning KV chunks.
+
+    q: (B, Sq, H, dh); k/v: (B, Sk, Hkv, dh); *_pos: (B, S*) int32.
+    Returns (B, Sq, H, dh) in q.dtype. Grouped heads handled by reshape.
+
+    shard_heads (§Perf A3): pin the grouped-query-head dim to the 'model'
+    mesh axis so the (b, sq, hkv, g, L) score/softmax tensors shard without
+    resharding; K/V stay replicated across model (the GQA standard — kv
+    heads are usually fewer than the model-axis size).
+    """
+    b, sq, h, dh = q.shape
+    _, sk, hkv, _ = k.shape
+    dv = v.shape[-1]              # may differ from dh (MLA)
+    g = h // hkv
+    scale = 1.0 / math.sqrt(dh)
+    qf = (q.astype(jnp.float32) * scale).reshape(b, sq, hkv, g, dh)
+    if shard_heads:
+        from jax.sharding import PartitionSpec as P
+        # pin whichever head axis is larger: GQA has few kv heads and many
+        # groups (shard g); MLA/MHA has g == 1 (shard hkv) — pinning a size-1
+        # dim would force full resharding instead (§Perf deepseek post-mortem)
+        spec = (P("data", None, None, "model", None) if g >= hkv
+                else P("data", None, "model", None, None))
+        try:
+            qf = jax.lax.with_sharding_constraint(qf, spec)
+        except (ValueError, RuntimeError):
+            pass
+
+    n_chunks = sk // kv_chunk
+    assert n_chunks * kv_chunk == sk, (sk, kv_chunk)
+    kc = k.astype(jnp.float32).reshape(b, n_chunks, kv_chunk, hkv, dh)
+    vc = v.astype(jnp.float32).reshape(b, n_chunks, kv_chunk, hkv, dv)
+    kpos = k_pos.reshape(b, n_chunks, kv_chunk)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        k_blk, v_blk, kp = inputs                        # (b, L, hkv, dh), (b, L)
+        s = jnp.einsum("bqkgd,blkd->bqkgl", qf, k_blk)   # (b, sq, hkv, g, L)
+        dpos = q_pos[:, :, None, None, None] - kp[:, None, None, None, :]
+        mask = jnp.ones_like(s, dtype=bool)
+        if causal:
+            mask &= dpos >= 0
+        if window is not None:
+            mask &= dpos < window
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bqkgl,blkd->bqkgd", p, v_blk)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, sq, hkv, g), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, sq, hkv, g), jnp.float32)
+    acc0 = jnp.zeros((b, sq, hkv, g, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), jnp.moveaxis(kpos, 1, 0)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, sq, h, dv).astype(q.dtype)
+
+
+def attention_shapes(cfg: ArchConfig) -> Shapes:
+    d, h, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    s: Shapes = {
+        "w_q": sds(d, h * dh),
+        "w_k": sds(d, hkv * dh),
+        "w_v": sds(d, hkv * dh),
+        "w_o": sds(h * dh, d),
+    }
+    if cfg.qkv_bias:
+        s["b_q"] = sds(h * dh)
+        s["b_k"] = sds(hkv * dh)
+        s["b_v"] = sds(hkv * dh)
+    return s
+
+
+def attention_apply(params: Shapes, x: jnp.ndarray, cfg: ArchConfig,
+                    positions: jnp.ndarray,
+                    positions3: Optional[jnp.ndarray] = None,
+                    kv_chunk: int = 1024,
+                    window: Optional[int] = None,
+                    cross_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+                    cache: Optional[Dict[str, jnp.ndarray]] = None):
+    """Self- or cross-attention. With ``cache`` (decode): x is (B, 1, d) and
+    the cache dict {k, v, index} is functionally updated and returned."""
+    b, s, d = x.shape
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = (x @ params["w_q"])
+    if cfg.qkv_bias:
+        q = q + params["b_q"]
+    q = q.reshape(b, s, h, dh)
+
+    if cross_kv is not None:
+        k, v = cross_kv
+        new_cache = None
+        out = _attend_block_scan(q, k, v, positions,
+                                 jnp.broadcast_to(jnp.arange(k.shape[1])[None], k.shape[:2]),
+                                 window=None, causal=False, kv_chunk=min(1024, k.shape[1]))
+    else:
+        k = x @ params["w_k"]
+        v = x @ params["w_v"]
+        if cfg.qkv_bias:
+            k = k + params["b_k"]
+            v = v + params["b_v"]
+        k = k.reshape(b, s, hkv, dh)
+        v = v.reshape(b, s, hkv, dh)
+        if cfg.rope_style == "mrope":
+            assert positions3 is not None
+            q = apply_mrope(q, positions3, cfg.rope_theta)
+            k = apply_mrope(k, positions3, cfg.rope_theta)
+        elif cfg.rope_style == "rope":
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+
+        if cache is None:
+            out = _attend_block_scan(q, k, v, positions, positions,
+                                     window=window, causal=True,
+                                     kv_chunk=min(kv_chunk, s),
+                                     shard_heads=getattr(cfg, "shard_attn_heads", False))
+            new_cache = None
+        else:
+            # decode: append this token's k/v at cache[index] (ring buffer for
+            # sliding window), attend over the whole cache
+            idx = cache["index"]                         # scalar int32
+            cache_len = cache["k"].shape[1]
+            slot = idx % cache_len if window is not None else idx
+            ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                              (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                              (0, slot, 0, 0))
+            # positions of cache slots for masking, stored +1 (0 = empty slot)
+            kpos = cache["pos"]
+            kpos = jax.lax.dynamic_update_slice(
+                kpos, positions.astype(kpos.dtype) + 1, (0, slot))
+            qf = (q.astype(jnp.float32) / math.sqrt(dh)).reshape(b, 1, hkv, h // hkv, dh)
+            scores = jnp.einsum("bqkgd,blkd->bqkgl", qf, ck.astype(jnp.float32))
+            dpos = positions[:, :, None, None, None] - (kpos[:, None, None, None, :] - 1)
+            mask = (dpos >= 0) & (kpos[:, None, None, None, :] > 0)
+            if window is not None:
+                mask &= dpos < window
+            scores = jnp.where(mask, scores, -1e30)
+            p = jax.nn.softmax(scores, axis=-1)
+            out = jnp.einsum("bqkgl,blkd->bqkgd", p, cv.astype(jnp.float32))
+            out = out.reshape(b, 1, h, dh).astype(x.dtype)
+            new_cache = {"k": ck, "v": cv, "pos": kpos, "index": idx + 1}
+
+    y = out.reshape(b, s, h * dh) @ params["w_o"]
+    return y, new_cache
+
+
+def attention_cache_shapes(cfg: ArchConfig, batch: int, cache_len: int,
+                           dtype=jnp.bfloat16) -> Shapes:
+    hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": sds(batch, cache_len, hkv, dh, dtype=dtype),
+        "v": sds(batch, cache_len, hkv, dh, dtype=dtype),
+        "pos": sds(batch, cache_len, dtype=jnp.int32),
+        "index": sds(dtype=jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------- MLA ------
+def mla_shapes(cfg: ArchConfig) -> Shapes:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    s: Shapes = {
+        "w_dkv": sds(d, m.kv_lora_rank),
+        "w_kr": sds(d, m.rope_head_dim),
+        "w_uk": sds(m.kv_lora_rank, h * m.nope_head_dim),
+        "w_uv": sds(m.kv_lora_rank, h * m.v_head_dim),
+        "w_o": sds(h * m.v_head_dim, d),
+        "kv_norm_scale": sds(m.kv_lora_rank),
+    }
+    if m.q_lora_rank:
+        s["w_dq"] = sds(d, m.q_lora_rank)
+        s["q_norm_scale"] = sds(m.q_lora_rank)
+        s["w_uq"] = sds(m.q_lora_rank, h * (m.nope_head_dim + m.rope_head_dim))
+    else:
+        s["w_q"] = sds(d, h * (m.nope_head_dim + m.rope_head_dim))
+    return s
+
+
+def mla_apply(params: Shapes, x: jnp.ndarray, cfg: ArchConfig,
+              positions: jnp.ndarray, kv_chunk: int = 1024,
+              window: Optional[int] = None,
+              cache: Optional[Dict[str, jnp.ndarray]] = None):
+    """DeepSeek-V2 Multi-head Latent Attention.
+
+    Train/prefill: expand the latent to per-head K/V (checkpoint-friendly).
+    Decode: ABSORBED form — queries are mapped into the latent space so the
+    cache stays (B, S, kv_lora + rope_dim) and attention is two thin matmuls
+    per token (the published serving optimization)."""
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.num_heads
+    dn, dr, dv = m.nope_head_dim, m.rope_head_dim, m.v_head_dim
+
+    if m.q_lora_rank:
+        q_lat = rms_norm(x @ params["w_dq"], params["q_norm_scale"], cfg.norm_eps)
+        q = (q_lat @ params["w_uq"]).reshape(b, s, h, dn + dr)
+    else:
+        q = (x @ params["w_q"]).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = rms_norm(x @ params["w_dkv"], params["kv_norm_scale"], cfg.norm_eps)  # (b,s,r)
+    k_rope = apply_rope((x @ params["w_kr"]).reshape(b, s, 1, dr), positions,
+                        cfg.rope_theta)                                           # shared
+
+    scale = 1.0 / math.sqrt(dn + dr)
+
+    if cache is None:
+        k_nope = (c_kv @ params["w_uk"]).reshape(b, s, h, dn)
+        v = (c_kv @ params["w_uv"]).reshape(b, s, h, dv)
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, dr))], axis=-1)
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = _attend_block_scan(qq, k, v, positions, positions,
+                                 window=window, causal=True,
+                                 kv_chunk=min(kv_chunk, s),
+                                 shard_heads=getattr(cfg, "shard_attn_heads", False))
+        y = out.reshape(b, s, h * dv) @ params["w_o"]
+        return y, None
+
+    # ---------------- absorbed decode ----------------
+    idx = cache["index"]
+    cc = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv.astype(cache["c_kv"].dtype),
+                                      (0, idx, 0))
+    ckr = jax.lax.dynamic_update_slice(cache["k_rope"],
+                                       k_rope[:, :, 0, :].astype(cache["k_rope"].dtype),
+                                       (0, idx, 0))
+    # stored +1 (0 = empty slot)
+    kpos = jax.lax.dynamic_update_slice(cache["pos"],
+                                        positions.astype(jnp.int32) + 1, (0, idx))
+    # absorb: q_lat[h] = q_nope[h] @ W_uk[h]^T  → latent-space queries
+    w_uk = params["w_uk"].reshape(m.kv_lora_rank, h, dn)
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)          # (b, 1, h, r)
+    s_lat = jnp.einsum("bshr,blr->bshl", q_lat, cc.astype(jnp.float32))
+    s_rope = jnp.einsum("bshd,bld->bshl", q_rope, ckr.astype(jnp.float32))
+    scores = (s_lat + s_rope) * scale
+    dpos = positions[:, :, None, None] - (kpos[:, None, None, :] - 1)
+    mask = (dpos >= 0) & (kpos[:, None, None, :] > 0)
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)                          # (b, 1, h, L)
+    o_lat = jnp.einsum("bshl,blr->bshr", p, cc.astype(jnp.float32))  # (b,1,h,r)
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, h, dv)
+    out = jnp.einsum("bshr,rhd->bshd", o_lat, w_uv)              # absorbed W_uv
+    y = out.reshape(b, s, h * dv).astype(x.dtype) @ params["w_o"]
+    return y, {"c_kv": cc, "k_rope": ckr, "pos": kpos, "index": idx + 1}
+
+
+def mla_cache_shapes(cfg: ArchConfig, batch: int, cache_len: int,
+                     dtype=jnp.bfloat16) -> Shapes:
+    m = cfg.mla
+    return {
+        "c_kv": sds(batch, cache_len, m.kv_lora_rank, dtype=dtype),
+        "k_rope": sds(batch, cache_len, m.rope_head_dim, dtype=dtype),
+        "pos": sds(batch, cache_len, dtype=jnp.int32),
+        "index": sds(dtype=jnp.int32),
+    }
+
+
+# -------------------------------------------------------------- embedding --
+def embedding_shapes(cfg: ArchConfig) -> Shapes:
+    s: Shapes = {"tok": sds(cfg.vocab_size, cfg.d_model)}
+    if not cfg.tie_embeddings:
+        s["unembed"] = sds(cfg.d_model, cfg.vocab_size)
+    return s
+
+
+def embed(params: Shapes, tokens: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    e = jnp.take(params["tok"], tokens, axis=0)
+    if cfg.name.startswith("gemma"):
+        e = e * math.sqrt(cfg.d_model)
+    return e.astype(jnp.bfloat16 if cfg.activation_dtype == "bfloat16" else jnp.float32)
+
+
+def unembed(params: Shapes, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        return x @ params["tok"].T.astype(x.dtype)
+    return x @ params["unembed"].astype(x.dtype)

@@ -1,0 +1,538 @@
+"""Assemble complete models from an ArchConfig.
+
+A ``ModelDef`` exposes exactly what the launchers need:
+  * ``param_shapes()``  — ShapeDtypeStruct tree (dry-run lowers from this);
+  * ``init(key)``       — materialized params (smoke tests / examples);
+  * ``loss_fn``         — next-token CE over a (tokens, labels) batch;
+  * ``prefill_fn``      — full-sequence forward → last-position logits;
+  * ``decode_fn``       — one token against a KV/SSM cache;
+  * ``cache_shapes``    — the decode cache tree for a (batch, cache_len).
+
+Repeated layers are stacked along a leading L axis and driven by
+``jax.lax.scan`` so that HLO size is O(1) in depth (compile-time at 126
+layers would otherwise be prohibitive) and remat policy applies per block.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.layers import Shapes, sds
+
+
+def _stack_shapes(shapes: Shapes, n: int) -> Shapes:
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((n,) + tuple(s.shape), s.dtype), shapes)
+
+
+def _act_dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.activation_dtype == "bfloat16" else jnp.float32
+
+
+# ===========================================================================
+# Block definitions
+# ===========================================================================
+def _dense_block_shapes(cfg: ArchConfig, use_moe: bool, d_ff: Optional[int] = None
+                        ) -> Shapes:
+    s: Shapes = {"ln1_scale": sds(cfg.d_model), "ln2_scale": sds(cfg.d_model)}
+    if cfg.mla is not None:
+        s["attn"] = L.mla_shapes(cfg)
+    else:
+        s["attn"] = L.attention_shapes(cfg)
+    if use_moe:
+        s["moe"] = MOE.moe_shapes(cfg)
+    else:
+        s["ffn"] = L.ffn_shapes(cfg, d_ff=d_ff)
+    return s
+
+
+def _dense_block_apply(params, x, cfg: ArchConfig, positions, positions3,
+                       window, cache, use_moe: bool):
+    attn_in = L.rms_norm(x, params["ln1_scale"], cfg.norm_eps)
+    if cfg.mla is not None:
+        h, new_cache = L.mla_apply(params["attn"], attn_in, cfg, positions,
+                                   window=window, cache=cache)
+    else:
+        h, new_cache = L.attention_apply(params["attn"], attn_in, cfg, positions,
+                                         positions3=positions3, window=window,
+                                         cache=cache)
+    x = x + h.astype(x.dtype)
+    ff_in = L.rms_norm(x, params["ln2_scale"], cfg.norm_eps)
+    if use_moe:
+        y, aux = MOE.moe_apply(params["moe"], ff_in, cfg)
+    else:
+        y, aux = L.ffn_apply(params["ffn"], ff_in, cfg), jnp.zeros((), jnp.float32)
+    return x + y.astype(x.dtype), new_cache, aux
+
+
+def _mamba_block_shapes(cfg: ArchConfig) -> Shapes:
+    return {"ln_scale": sds(cfg.d_model), "mamba": SSM.mamba_shapes(cfg)}
+
+
+def _mamba_block_apply(params, x, cfg: ArchConfig, cache):
+    h, new_cache = SSM.mamba_apply(params["mamba"],
+                                   L.rms_norm(x, params["ln_scale"], cfg.norm_eps),
+                                   cfg, cache=cache)
+    return x + h.astype(x.dtype), new_cache
+
+
+# ===========================================================================
+# Decoder-only stack (dense / moe / vlm)
+# ===========================================================================
+def _decoder_shapes(cfg: ArchConfig) -> Shapes:
+    s: Shapes = {"embed": L.embedding_shapes(cfg),
+                 "final_ln_scale": sds(cfg.d_model)}
+    if cfg.family == "moe":
+        n_moe = cfg.num_layers - (1 if cfg.mla is not None else 0)
+        if cfg.mla is not None:   # deepseek: first layer dense
+            s["dense0"] = _dense_block_shapes(cfg, use_moe=False, d_ff=cfg.d_ff)
+        s["blocks"] = _stack_shapes(_dense_block_shapes(cfg, use_moe=True), n_moe)
+    else:
+        s["blocks"] = _stack_shapes(_dense_block_shapes(cfg, use_moe=False),
+                                    cfg.num_layers)
+    return s
+
+
+def _positions3_for(cfg: ArchConfig, batch: int, prefix: int, total: int,
+                    offset) -> jnp.ndarray:
+    """M-RoPE position streams (3, B, S): patch prefix gets a (t=0, h, w)
+    grid; text gets t=h=w=linear position."""
+    side = max(int(math.sqrt(max(prefix, 1))), 1)
+    idx = jnp.arange(total)
+    is_text = idx >= prefix
+    t = jnp.where(is_text, idx, 0)
+    hh = jnp.where(is_text, idx, idx // side)
+    ww = jnp.where(is_text, idx, idx % side)
+    pos3 = jnp.stack([t, hh, ww])[:, None, :] + jnp.zeros((1, batch, 1), jnp.int32)
+    return pos3 + offset[None, :, None] if offset is not None else pos3
+
+
+def _decoder_forward(params, cfg: ArchConfig, x, positions, positions3,
+                     window, caches):
+    """x: (B, S, d) embedded input. caches: None (train/prefill) or stacked
+    tree. Returns (hidden, new_caches, aux_loss_sum)."""
+    decode = caches is not None
+    use_moe = cfg.family == "moe"
+
+    def block(p, x, cache):
+        return _dense_block_apply(p, x, cfg, positions, positions3, window,
+                                  cache, use_moe=use_moe)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    if cfg.family == "moe" and cfg.mla is not None:
+        c0 = caches["dense0"] if decode else None
+        x, nc0, _ = _dense_block_apply(params["dense0"], x, cfg, positions,
+                                       positions3, window, c0, use_moe=False)
+    else:
+        nc0 = None
+
+    def scan_fn(carry, inp):
+        x, aux = carry
+        if decode:
+            p, c = inp
+        else:
+            p, c = inp, None
+        x, nc, a = block(p, x, c)
+        return (x, aux + a), nc
+
+    scan_body = jax.checkpoint(scan_fn) if (cfg.remat and not decode) else scan_fn
+    xs = (params["blocks"], caches["blocks"]) if decode else params["blocks"]
+    (x, aux_total), new_block_caches = jax.lax.scan(scan_body, (x, aux_total), xs)
+
+    x = L.rms_norm(x, params["final_ln_scale"], cfg.norm_eps)
+    new_caches = None
+    if decode:
+        new_caches = {"blocks": new_block_caches}
+        if nc0 is not None:
+            new_caches["dense0"] = nc0
+    return x, new_caches, aux_total
+
+
+# ===========================================================================
+# Hybrid (zamba2): mamba backbone + one SHARED attention block
+# ===========================================================================
+def _hybrid_shapes(cfg: ArchConfig) -> Shapes:
+    n_super = cfg.num_layers // cfg.hybrid_attn_every
+    n_rest = cfg.num_layers - n_super * cfg.hybrid_attn_every
+    s: Shapes = {
+        "embed": L.embedding_shapes(cfg),
+        "final_ln_scale": sds(cfg.d_model),
+        "shared_attn": _dense_block_shapes(cfg, use_moe=False),
+        "super": _stack_shapes(
+            _stack_shapes(_mamba_block_shapes(cfg), cfg.hybrid_attn_every), n_super),
+    }
+    if n_rest:
+        s["rest"] = _stack_shapes(_mamba_block_shapes(cfg), n_rest)
+    return s
+
+
+def _hybrid_forward(params, cfg: ArchConfig, x, positions, window, caches):
+    decode = caches is not None
+    n_super = cfg.num_layers // cfg.hybrid_attn_every
+
+    def mamba_scan(x, stacked, stacked_cache):
+        def fn(carry, inp):
+            if decode:
+                p, c = inp
+            else:
+                p, c = inp, None
+            h, nc = _mamba_block_apply(p, carry, cfg, c)
+            return h, nc
+        body = jax.checkpoint(fn) if (cfg.remat and not decode) else fn
+        xs = (stacked, stacked_cache) if decode else stacked
+        return jax.lax.scan(body, x, xs)
+
+    def super_fn(carry, inp):
+        x = carry
+        if decode:
+            p, c = inp
+            x, new_mcache = mamba_scan(x, p, c["mamba"])
+            x, new_acache, _ = _dense_block_apply(
+                params["shared_attn"], x, cfg, positions, None, window,
+                c["attn"], use_moe=False)
+            return x, {"mamba": new_mcache, "attn": new_acache}
+        p = inp
+        x, _ = mamba_scan(x, p, None)
+        x, _, _ = _dense_block_apply(params["shared_attn"], x, cfg, positions,
+                                     None, window, None, use_moe=False)
+        return x, None
+
+    xs = (params["super"], caches["super"]) if decode else params["super"]
+    x, new_super = jax.lax.scan(super_fn, x, xs)
+
+    new_rest = None
+    if "rest" in params:
+        x, new_rest = mamba_scan(x, params["rest"],
+                                 caches["rest"] if decode else None)
+
+    x = L.rms_norm(x, params["final_ln_scale"], cfg.norm_eps)
+    new_caches = None
+    if decode:
+        new_caches = {"super": new_super}
+        if new_rest is not None:
+            new_caches["rest"] = new_rest
+    return x, new_caches
+
+
+# ===========================================================================
+# SSM (mamba2): pure mamba stack
+# ===========================================================================
+def _ssm_shapes(cfg: ArchConfig) -> Shapes:
+    return {
+        "embed": L.embedding_shapes(cfg),
+        "final_ln_scale": sds(cfg.d_model),
+        "blocks": _stack_shapes(_mamba_block_shapes(cfg), cfg.num_layers),
+    }
+
+
+def _ssm_forward(params, cfg: ArchConfig, x, caches):
+    decode = caches is not None
+
+    def fn(carry, inp):
+        if decode:
+            p, c = inp
+        else:
+            p, c = inp, None
+        h, nc = _mamba_block_apply(p, carry, cfg, c)
+        return h, nc
+
+    body = jax.checkpoint(fn) if (cfg.remat and not decode) else fn
+    xs = (params["blocks"], caches["blocks"]) if decode else params["blocks"]
+    x, new_caches = jax.lax.scan(body, x, xs)
+    x = L.rms_norm(x, params["final_ln_scale"], cfg.norm_eps)
+    return x, ({"blocks": new_caches} if decode else None)
+
+
+# ===========================================================================
+# Encoder-decoder (seamless)
+# ===========================================================================
+def _enc_block_shapes(cfg: ArchConfig) -> Shapes:
+    return {"ln1_scale": sds(cfg.d_model), "ln2_scale": sds(cfg.d_model),
+            "attn": L.attention_shapes(cfg), "ffn": L.ffn_shapes(cfg)}
+
+
+def _dec_block_shapes(cfg: ArchConfig) -> Shapes:
+    return {"ln1_scale": sds(cfg.d_model), "ln2_scale": sds(cfg.d_model),
+            "ln3_scale": sds(cfg.d_model),
+            "self_attn": L.attention_shapes(cfg),
+            "cross_attn": L.attention_shapes(cfg),
+            "ffn": L.ffn_shapes(cfg)}
+
+
+def _encdec_shapes(cfg: ArchConfig) -> Shapes:
+    return {
+        "embed": L.embedding_shapes(cfg),
+        "final_ln_scale": sds(cfg.d_model),
+        "enc_final_ln_scale": sds(cfg.d_model),
+        "enc_blocks": _stack_shapes(_enc_block_shapes(cfg), cfg.encoder_layers),
+        "dec_blocks": _stack_shapes(_dec_block_shapes(cfg), cfg.num_layers),
+    }
+
+
+def _sinusoidal_pos(positions: jnp.ndarray, d: int) -> jnp.ndarray:
+    """SeamlessM4T/NLLB-style sinusoidal position embeddings (computed, not
+    learned — no table bound at long contexts). positions: any int shape."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                    * (jnp.log(10000.0) / max(half - 1, 1)))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    emb = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    if d % 2:
+        emb = jnp.pad(emb, [(0, 0)] * (emb.ndim - 1) + [(0, 1)])
+    return emb
+
+
+def _encode(params, cfg: ArchConfig, embeds):
+    b, s, _ = embeds.shape
+    pos = jnp.arange(s)
+    x = embeds.astype(_act_dtype(cfg)) \
+        + _sinusoidal_pos(pos, cfg.d_model)[None].astype(_act_dtype(cfg))
+    positions = jnp.broadcast_to(pos[None], (b, s))
+
+    def fn(x, p):
+        h, _ = L.attention_apply(p["attn"],
+                                 L.rms_norm(x, p["ln1_scale"], cfg.norm_eps),
+                                 cfg, positions, kv_chunk=min(1024, s))
+        # non-causal: bidirectional self-attention
+        x = x + h.astype(x.dtype)
+        y = L.ffn_apply(p["ffn"], L.rms_norm(x, p["ln2_scale"], cfg.norm_eps), cfg)
+        return x + y.astype(x.dtype), None
+
+    # bidirectional: patch causal masking by passing positions that never mask
+    def fn_bidir(x, p):
+        attn_in = L.rms_norm(x, p["ln1_scale"], cfg.norm_eps)
+        h, _ = L.attention_apply(
+            p["attn"], attn_in, cfg,
+            positions=jnp.zeros_like(positions),   # dpos==0 → causal mask all-pass
+            kv_chunk=min(1024, s))
+        x = x + h.astype(x.dtype)
+        y = L.ffn_apply(p["ffn"], L.rms_norm(x, p["ln2_scale"], cfg.norm_eps), cfg)
+        return x + y.astype(x.dtype), None
+
+    body = jax.checkpoint(fn_bidir) if cfg.remat else fn_bidir
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return L.rms_norm(x, params["enc_final_ln_scale"], cfg.norm_eps)
+
+
+def _decode_stack(params, cfg: ArchConfig, x, positions, enc_out, window, caches):
+    decode = caches is not None
+    b = x.shape[0]
+
+    def fn(carry, inp):
+        x = carry
+        if decode:
+            p, c = inp
+        else:
+            p, c = inp, None
+        h, nc = L.attention_apply(p["self_attn"],
+                                  L.rms_norm(x, p["ln1_scale"], cfg.norm_eps),
+                                  cfg, positions, window=window, cache=c)
+        x = x + h.astype(x.dtype)
+        ck = L.rms_norm(x, p["ln2_scale"], cfg.norm_eps)
+        # cross-attention K/V from encoder output (recomputed per block from
+        # the block's own projections)
+        kv_in = enc_out
+        k = (kv_in @ p["cross_attn"]["w_k"]).reshape(
+            b, kv_in.shape[1], cfg.num_kv_heads, cfg.resolved_head_dim)
+        v = (kv_in @ p["cross_attn"]["w_v"]).reshape(
+            b, kv_in.shape[1], cfg.num_kv_heads, cfg.resolved_head_dim)
+        h2, _ = L.attention_apply(p["cross_attn"], ck, cfg, positions,
+                                  cross_kv=(k, v))
+        x = x + h2.astype(x.dtype)
+        y = L.ffn_apply(p["ffn"], L.rms_norm(x, p["ln3_scale"], cfg.norm_eps), cfg)
+        return x + y.astype(x.dtype), nc
+
+    body = jax.checkpoint(fn) if (cfg.remat and not decode) else fn
+    xs = (params["dec_blocks"], caches["blocks"]) if decode else params["dec_blocks"]
+    x, new_caches = jax.lax.scan(body, x, xs)
+    x = L.rms_norm(x, params["final_ln_scale"], cfg.norm_eps)
+    return x, ({"blocks": new_caches} if decode else None)
+
+
+# ===========================================================================
+# ModelDef
+# ===========================================================================
+@dataclass(frozen=True)
+class ModelDef:
+    cfg: ArchConfig
+    param_shapes: Callable[[], Shapes]
+    init: Callable[[jax.Array], Any]
+    loss_fn: Callable[[Any, Dict[str, jnp.ndarray]], jnp.ndarray]
+    prefill_fn: Callable[[Any, Dict[str, jnp.ndarray]], jnp.ndarray]
+    decode_fn: Callable[[Any, Any, Dict[str, jnp.ndarray]], Tuple[jnp.ndarray, Any]]
+    cache_shapes: Callable[[int, int], Shapes]
+    hidden_fn: Callable[[Any, Dict[str, jnp.ndarray]], jnp.ndarray] = None
+
+
+def _ce_loss(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def build_model(cfg: ArchConfig, window_override: Optional[int] = None) -> ModelDef:
+    """window_override: force sliding-window attention (the long_500k variant
+    for dense archs — DESIGN.md §4)."""
+    window = window_override if window_override is not None else cfg.attn_window
+    adt = _act_dtype(cfg)
+
+    # ----------------------------------------------------------- shapes ----
+    if cfg.family in ("dense", "moe", "vlm"):
+        shapes_fn = lambda: _decoder_shapes(cfg)
+    elif cfg.family == "hybrid":
+        shapes_fn = lambda: _hybrid_shapes(cfg)
+    elif cfg.family == "ssm":
+        shapes_fn = lambda: _ssm_shapes(cfg)
+    elif cfg.family == "audio":
+        shapes_fn = lambda: _encdec_shapes(cfg)
+    else:
+        raise ValueError(cfg.family)
+
+    # ----------------------------------------------------- forward pieces --
+    def embed_batch(params, batch):
+        """tokens (+ prefix embeds) → (x, positions, positions3)."""
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        x = L.embed(params["embed"], tokens, cfg)
+        prefix = 0
+        if "embeds" in batch and cfg.family in ("vlm",):
+            pre = batch["embeds"].astype(x.dtype)
+            x = jnp.concatenate([pre, x], axis=1)
+            prefix = pre.shape[1]
+        s = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        positions3 = None
+        if cfg.rope_style == "mrope":
+            positions3 = _positions3_for(cfg, b, prefix, s, None)
+        return x, positions, positions3, prefix
+
+    def forward_hidden(params, batch, caches=None, decode_positions=None):
+        if cfg.family == "audio":
+            enc_out = _encode(params, cfg, batch["embeds"])
+            if caches is None:
+                tokens = batch["tokens"]
+                b, s = tokens.shape
+                x = L.embed(params["embed"], tokens, cfg)
+                x = x + _sinusoidal_pos(jnp.arange(s), cfg.d_model)[None].astype(x.dtype)
+                positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+                h, _ = _decode_stack(params, cfg, x, positions, enc_out,
+                                     window, None)
+                return h, None, jnp.zeros((), jnp.float32)
+            # decode: enc_out precomputed is in batch["embeds"]-derived cache?
+            raise RuntimeError("audio decode uses forward_decode")
+        if cfg.family in ("dense", "moe", "vlm"):
+            x, positions, positions3, _ = embed_batch(params, batch)
+            return _decoder_forward(params, cfg, x, positions, positions3,
+                                    window, caches)
+        if cfg.family == "hybrid":
+            x, positions, _, _ = embed_batch(params, batch)
+            h, nc = _hybrid_forward(params, cfg, x, positions, window, caches)
+            return h, nc, jnp.zeros((), jnp.float32)
+        if cfg.family == "ssm":
+            x, _, _, _ = embed_batch(params, batch)
+            h, nc = _ssm_forward(params, cfg, x, caches)
+            return h, nc, jnp.zeros((), jnp.float32)
+        raise ValueError(cfg.family)
+
+    # -------------------------------------------------------------- loss ---
+    def loss_fn(params, batch):
+        h, _, aux = forward_hidden(params, batch)
+        labels = batch["labels"]
+        if cfg.family == "vlm" and "embeds" in batch:
+            h = h[:, batch["embeds"].shape[1]:, :]   # loss over text positions
+        logits = L.unembed(params["embed"], h, cfg)
+        return _ce_loss(logits, labels) + 0.01 * aux
+
+    # ------------------------------------------------------------ prefill --
+    def prefill_fn(params, batch):
+        h, _, _ = forward_hidden(params, batch)
+        last = h[:, -1:, :]
+        logits = L.unembed(params["embed"], last, cfg)
+        return logits[:, 0, :]
+
+    # ------------------------------------------------------------- decode --
+    def decode_fn(params, caches, batch):
+        token = batch["token"]                       # (B, 1)
+        pos = batch["pos"]                           # (B, 1) int32
+        b = token.shape[0]
+        x = L.embed(params["embed"], token, cfg)
+        if cfg.family == "audio":
+            x = x + _sinusoidal_pos(pos[:, 0], cfg.d_model)[:, None].astype(x.dtype)
+            enc_out = caches["enc_out"].astype(adt)
+            h, nc = _decode_stack(params, cfg, x, pos, enc_out, window,
+                                  {"blocks": caches["blocks"]})
+            nc["enc_out"] = caches["enc_out"]
+        elif cfg.family in ("dense", "moe", "vlm"):
+            positions3 = None
+            if cfg.rope_style == "mrope":
+                positions3 = jnp.broadcast_to(pos[None], (3, b, 1))
+            h, nc, _ = _decoder_forward(params, cfg, x, pos, positions3,
+                                        window, caches)
+        elif cfg.family == "hybrid":
+            h, nc = _hybrid_forward(params, cfg, x, pos, window, caches)
+        elif cfg.family == "ssm":
+            h, nc = _ssm_forward(params, cfg, x, caches)
+        else:
+            raise ValueError(cfg.family)
+        logits = L.unembed(params["embed"], h, cfg)[:, 0, :]
+        return logits, nc
+
+    # ------------------------------------------------------ cache shapes ---
+    def cache_shapes(batch: int, cache_len: int) -> Shapes:
+        eff_len = min(cache_len, window) if window is not None else cache_len
+        if cfg.family in ("dense", "moe", "vlm"):
+            if cfg.mla is not None:
+                blk = L.mla_cache_shapes(cfg, batch, eff_len)
+                n_moe = cfg.num_layers - 1
+                out = {"blocks": _stack_shapes(blk, n_moe), "dense0": blk}
+            else:
+                blk = L.attention_cache_shapes(cfg, batch, eff_len)
+                out = {"blocks": _stack_shapes(blk, cfg.num_layers)}
+            return out
+        if cfg.family == "hybrid":
+            n_super = cfg.num_layers // cfg.hybrid_attn_every
+            n_rest = cfg.num_layers - n_super * cfg.hybrid_attn_every
+            attn_len = min(eff_len, cfg.attn_window or eff_len)
+            super_blk = {
+                "mamba": _stack_shapes(SSM.mamba_cache_shapes(cfg, batch),
+                                       cfg.hybrid_attn_every),
+                "attn": L.attention_cache_shapes(cfg, batch, attn_len),
+            }
+            out = {"super": _stack_shapes(super_blk, n_super)}
+            if n_rest:
+                out["rest"] = _stack_shapes(SSM.mamba_cache_shapes(cfg, batch),
+                                            n_rest)
+            return out
+        if cfg.family == "ssm":
+            return {"blocks": _stack_shapes(SSM.mamba_cache_shapes(cfg, batch),
+                                            cfg.num_layers)}
+        if cfg.family == "audio":
+            blk = L.attention_cache_shapes(cfg, batch, eff_len)
+            return {"blocks": _stack_shapes(blk, cfg.num_layers),
+                    "enc_out": sds(batch, cfg.prefix_tokens, cfg.d_model,
+                                   dtype=jnp.bfloat16)}
+        raise ValueError(cfg.family)
+
+    def init(key):
+        return L.init_params(key, shapes_fn())
+
+    def hidden_fn(params, batch):
+        """Final-layer hidden states (B, S, d) — used when the backbone acts
+        as a VFL representation extractor f_k (DESIGN.md §4)."""
+        h, _, _ = forward_hidden(params, batch)
+        return h
+
+    return ModelDef(cfg=cfg, param_shapes=shapes_fn, init=init,
+                    loss_fn=loss_fn, prefill_fn=prefill_fn,
+                    decode_fn=decode_fn, cache_shapes=cache_shapes,
+                    hidden_fn=hidden_fn)

@@ -1,0 +1,100 @@
+"""Mixture-of-Experts FFN with capacity-bounded scatter dispatch.
+
+TPU adaptation notes (DESIGN.md §3): instead of the GShard one-hot dispatch
+einsum — whose (T, E, C) tensor is astronomically large at our token counts —
+tokens are routed by computing a flat destination slot ``e·C + pos_in_expert``
+(cumsum over the top-k expert assignments) and scatter-added into the
+(E·C, d) expert input buffer. Combine is the transposed gather weighted by
+the normalized top-k gates. Both lower to efficient XLA scatter/gather and
+shard cleanly with the expert-buffer (E·C) dim on the data/model axes.
+
+Load-balance: the standard switch-style auxiliary loss (mean gate fraction ×
+mean dispatch fraction per expert) is returned for the trainer to add.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import Shapes, ffn_apply, ffn_shapes, sds
+
+
+def moe_shapes(cfg: ArchConfig) -> Shapes:
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.d_ff_expert, m.num_experts
+    s: Shapes = {
+        "router": sds(d, e),
+        "w_gate_e": sds(e, d, f),
+        "w_up_e": sds(e, d, f),
+        "w_down_e": sds(e, f, d),
+    }
+    if m.num_shared_experts:
+        s["shared"] = ffn_shapes(cfg, d_ff=m.d_ff_shared)
+    return s
+
+
+def moe_apply(params: Shapes, x: jnp.ndarray, cfg: ArchConfig
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) → (y, aux_loss)."""
+    m = cfg.moe
+    capacity_factor = m.capacity_factor
+    b, s, d = x.shape
+    t = b * s
+    e, k = m.num_experts, m.top_k
+    xf = x.reshape(t, d)
+
+    logits = (xf.astype(jnp.float32) @ params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                        # (T, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)                # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    if s == 1:
+        # decode: drop-free (worst case every token routes to one expert);
+        # T is just the batch here so the buffer stays small
+        capacity = t
+    else:
+        capacity = max(int(t * k / e * capacity_factor), 1)
+
+    # position of each (token, slot) within its expert: cumsum over the
+    # token-major flattening of the one-hot assignments
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.int32)        # (T, k, E)
+    flat = onehot.reshape(t * k, e)
+    pos = jnp.cumsum(flat, axis=0) - flat                          # (T*k, E)
+    pos_in_expert = jnp.sum(pos * flat, axis=-1).reshape(t, k)     # (T, k)
+    keep = pos_in_expert < capacity
+    dest = expert_idx * capacity + pos_in_expert                   # (T, k)
+    dest = jnp.where(keep, dest, e * capacity)                     # overflow slot
+
+    # dispatch: scatter tokens into the (E*C [+1 overflow], d) buffer
+    buf = jnp.zeros((e * capacity + 1, d), xf.dtype)
+    buf = buf.at[dest.reshape(-1)].add(
+        jnp.repeat(xf, k, axis=0).reshape(t * k, d)
+        * keep.reshape(t * k, 1).astype(xf.dtype))
+    expert_in = buf[:e * capacity].reshape(e, capacity, d)
+
+    # expert FFN (batched over E): swiglu
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, params["w_gate_e"])) \
+        * jnp.einsum("ecd,edf->ecf", expert_in, params["w_up_e"])
+    expert_out = jnp.einsum("ecf,efd->ecd", h, params["w_down_e"])
+
+    # combine: gather back and weight by gates
+    flat_out = jnp.concatenate(
+        [expert_out.reshape(e * capacity, d),
+         jnp.zeros((1, d), expert_out.dtype)], axis=0)
+    gathered = flat_out[dest.reshape(-1)].reshape(t, k, d)
+    y = jnp.sum(gathered * gate_vals[..., None].astype(gathered.dtype), axis=1)
+
+    if m.num_shared_experts:
+        shared_cfg = cfg  # swiglu shared ffn
+        y = y + ffn_apply(params["shared"], xf, cfg).astype(y.dtype)
+
+    # switch aux loss
+    me = jnp.mean(probs, axis=0)                                   # mean gate
+    ce = jnp.mean(jnp.sum(onehot, axis=1).astype(jnp.float32), axis=0)  # dispatch frac
+    aux = e * jnp.sum(me * ce) / k
+
+    return y.reshape(b, s, d).astype(x.dtype), aux

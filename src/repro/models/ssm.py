@@ -1,0 +1,185 @@
+"""Mamba2 (SSD — state-space duality) blocks, chunked for TPU.
+
+Training/prefill uses the chunked SSD algorithm [arXiv:2405.21060 §6]:
+within-chunk terms are dense (L, L) matmuls that feed the MXU; cross-chunk
+state is carried by a lax.scan over chunks — sequence-parallel-friendly and
+never materializes the (S, S) semiseparable matrix.
+
+Decode is the constant-memory recurrence: h ← exp(Δ·A)·h + Δ·B·x per step,
+with a (conv_width-1)-deep rolling buffer for the causal conv.
+
+Single SSM group (G=1), matching the assigned Mamba2/Zamba2 scales.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import Shapes, rms_norm, sds
+
+
+def _dims(cfg: ArchConfig):
+    ssm = cfg.ssm
+    d_inner = ssm.expand * cfg.d_model
+    n_heads = d_inner // ssm.head_dim
+    return d_inner, n_heads, ssm.d_state, ssm.conv_width
+
+
+def mamba_shapes(cfg: ArchConfig) -> Shapes:
+    d_inner, n_heads, n, width = _dims(cfg)
+    d = cfg.d_model
+    conv_ch = d_inner + 2 * n
+    return {
+        "in_proj": sds(d, 2 * d_inner + 2 * n + n_heads),
+        "conv_w": sds(width, conv_ch),
+        "conv_bias": sds(conv_ch),
+        "A_log": sds(n_heads),
+        "D": sds(n_heads),
+        "dt_bias": sds(n_heads),
+        "gate_norm_scale": sds(d_inner),
+        "out_proj": sds(d_inner, d),
+    }
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """(..., L) → (..., L, L) lower-triangular segment sums Σ_{j<k≤i} x_k."""
+    l = x.shape[-1]
+    cum = jnp.cumsum(x, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+                b_mat: jnp.ndarray, c_mat: jnp.ndarray, chunk: int,
+                initial_state: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD scan. x (B,S,H,P), dt (B,S,H), a (H,) negative, b/c (B,S,N).
+
+    Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    bb, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    nc = s // chunk
+    assert nc * chunk == s, (s, chunk)
+    xc = x.reshape(bb, nc, chunk, h, p)
+    dtc = dt.reshape(bb, nc, chunk, h)
+    bc = b_mat.reshape(bb, nc, chunk, n)
+    cc = c_mat.reshape(bb, nc, chunk, n)
+
+    a_bar = dtc * a[None, None, None, :]                      # (b,c,l,h)
+    a_cum = jnp.cumsum(a_bar, axis=2)
+    # within-chunk (the "quadratic attention-like" branch)
+    decay = jnp.exp(_segsum(jnp.moveaxis(a_bar, -1, 2)))      # (b,c,h,l,l)
+    cb = jnp.einsum("bcln,bcjn->bclj", cc, bc)                # (b,c,l,j)
+    m = cb[:, :, None] * decay                                # (b,c,h,l,j)
+    y_diag = jnp.einsum("bchlj,bcjh,bcjhp->bclhp", m, dtc, xc)
+
+    # end-of-chunk states
+    state_decay = jnp.exp(a_cum[:, :, -1:, :] - a_cum)        # (b,c,l,h)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", bc, state_decay * dtc, xc)
+
+    # cross-chunk scan
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])                 # (b,c,h)
+    h0 = (initial_state if initial_state is not None
+          else jnp.zeros((bb, h, p, n), jnp.float32))
+
+    def scan_fn(carry, inp):
+        st, dec = inp                                          # (b,h,p,n), (b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                      # emit PREVIOUS
+
+    final, prev_states = jax.lax.scan(
+        scan_fn, h0.astype(jnp.float32),
+        (jnp.moveaxis(states, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(chunk_decay, 1, 0).astype(jnp.float32)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)              # (b,c,h,p,n)
+
+    in_decay = jnp.exp(a_cum)                                  # (b,c,l,h)
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", cc,
+                       prev_states.astype(xc.dtype), in_decay)
+    y = (y_diag + y_off).reshape(bb, s, h, p)
+    return y, final
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv1d. x (B, S, C), w (W, C)."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(width))
+    return out + bias
+
+
+def mamba_apply(params: Shapes, x: jnp.ndarray, cfg: ArchConfig,
+                cache: Optional[Dict[str, jnp.ndarray]] = None):
+    """Full-sequence (cache=None) or single-step decode (cache given)."""
+    d_inner, n_heads, n, width = _dims(cfg)
+    bsz, s, _ = x.shape
+    zxbcdt = x @ params["in_proj"]
+    z, xin, b_mat, c_mat, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xin, b_mat, c_mat], axis=-1)    # (B,S,conv_ch)
+
+    if cache is None:
+        conv_out = jax.nn.silu(_causal_conv(conv_in, params["conv_w"],
+                                            params["conv_bias"]))
+        new_cache = None
+    else:
+        buf = jnp.concatenate([cache["conv"], conv_in], axis=1)  # (B, W, C)
+        conv_out = jax.nn.silu(
+            jnp.sum(buf * params["conv_w"][None], axis=1, keepdims=True)
+            + params["conv_bias"])
+        new_conv = buf[:, 1:, :]
+        new_cache = {"conv": new_conv}
+
+    xin, b_mat, c_mat = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+    xh = xin.reshape(bsz, s, n_heads, -1)                      # (B,S,H,P)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    if getattr(cfg, "shard_ssm_heads", False) and cache is None:
+        # §Perf B6: SSD heads are embarrassingly parallel — pin the head dim
+        # to the 'model' mesh axis so the (b, c, h, l, l) within-chunk decay
+        # tensors shard 16× with zero resharding (the baseline left XLA to
+        # spatially repartition them with all-to-alls every scan step).
+        from jax.sharding import PartitionSpec as P
+        try:
+            xh = jax.lax.with_sharding_constraint(
+                xh, P("data", None, "model", None))
+            dt = jax.lax.with_sharding_constraint(dt, P("data", None, "model"))
+        except (ValueError, RuntimeError):
+            pass   # no mesh in scope (single-device smoke tests)
+
+    if cache is None:
+        y, final = ssd_chunked(xh.astype(jnp.float32), dt, a,
+                               b_mat.astype(jnp.float32), c_mat.astype(jnp.float32),
+                               chunk=min(cfg.ssm.chunk, s))
+    else:
+        # recurrence: h ← exp(Δa)h + Δ·B·x ;  y = C·h
+        hstate = cache["ssm"]                                  # (B,H,P,N) f32
+        dt1 = dt[:, 0]                                         # (B,H)
+        da = jnp.exp(dt1 * a[None, :])                         # (B,H)
+        bx = jnp.einsum("bn,bhp,bh->bhpn", b_mat[:, 0].astype(jnp.float32),
+                        xh[:, 0].astype(jnp.float32), dt1)
+        hstate = hstate * da[..., None, None] + bx
+        y = jnp.einsum("bn,bhpn->bhp", c_mat[:, 0].astype(jnp.float32), hstate)
+        y = y[:, None]                                         # (B,1,H,P)
+        new_cache["ssm"] = hstate
+
+    y = y + xh.astype(jnp.float32) * params["D"][None, None, :, None]
+    y = y.reshape(bsz, s, d_inner)
+    y = rms_norm(y.astype(x.dtype) * jax.nn.silu(z), params["gate_norm_scale"],
+                 cfg.norm_eps)
+    return y @ params["out_proj"], new_cache
+
+
+def mamba_cache_shapes(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> Shapes:
+    d_inner, n_heads, n, width = _dims(cfg)
+    conv_ch = d_inner + 2 * n
+    return {
+        "conv": sds(batch, width - 1, conv_ch, dtype=dtype),
+        "ssm": sds(batch, n_heads, cfg.ssm.head_dim, n, dtype=jnp.float32),
+    }

@@ -1,0 +1,41 @@
+"""Use any assigned architecture as a VFL representation extractor f_k.
+
+The vertical split for sequence data gives each party a token-range slice
+(DESIGN.md §4); the party's backbone encodes its slice and mean-pools the
+final hidden states into a rep_dim representation. This is what "the paper's
+technique applied to the assigned architectures" means operationally: the
+one-shot/few-shot protocol (gradient clustering, SSL with the tabular
+FixMatch-tab masking over embeddings) runs unchanged on top.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.extractors import Model
+from repro.models.model_zoo import build_model
+
+
+def make_zoo_extractor(cfg: ArchConfig, rep_dim: int = 64) -> Model:
+    """Model facade over a (reduced) zoo backbone: x is (B, S) int32 tokens."""
+    backbone = build_model(cfg)
+
+    def init(key, sample):
+        k1, k2 = jax.random.split(key)
+        params = backbone.init(k1)
+        params["rep_head"] = (0.02 * jax.random.normal(
+            k2, (cfg.d_model, rep_dim))).astype(jnp.float32)
+        return params
+
+    def apply(params, x, train: bool = False):
+        del train
+        body = {k: v for k, v in params.items() if k != "rep_head"}
+        h = backbone.hidden_fn(body, {"tokens": x.astype(jnp.int32)})
+        pooled = jnp.mean(h.astype(jnp.float32), axis=1)
+        return pooled @ params["rep_head"]
+
+    return Model(init=init, apply=apply, rep_dim=rep_dim)

@@ -1,0 +1,26 @@
+"""Pure-JAX optimizers (optax-like GradientTransformation pytree API)."""
+from repro.optim.transform import (
+    GradientTransformation,
+    apply_updates,
+    chain,
+    clip_by_global_norm,
+    scale,
+    scale_by_schedule,
+)
+from repro.optim.optimizers import adam, adamw, sgd
+from repro.optim.schedules import constant, cosine_decay, linear_warmup_cosine
+
+__all__ = [
+    "GradientTransformation",
+    "apply_updates",
+    "chain",
+    "clip_by_global_norm",
+    "scale",
+    "scale_by_schedule",
+    "adam",
+    "adamw",
+    "sgd",
+    "constant",
+    "cosine_decay",
+    "linear_warmup_cosine",
+]

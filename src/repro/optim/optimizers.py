@@ -1,0 +1,95 @@
+"""SGD / Adam / AdamW built on the transform combinators."""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.transform import GradientTransformation
+
+ScalarOrSchedule = Union[float, Callable]
+
+
+def _lr(lr: ScalarOrSchedule, step):
+    return lr(step) if callable(lr) else lr
+
+
+class SGDState(NamedTuple):
+    step: jnp.ndarray
+    momentum: Optional[object]
+
+
+def sgd(learning_rate: ScalarOrSchedule, momentum: float = 0.0,
+        nesterov: bool = False, weight_decay: float = 0.0) -> GradientTransformation:
+    def init(params):
+        mom = None
+        if momentum:
+            mom = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return SGDState(step=jnp.zeros((), jnp.int32), momentum=mom)
+
+    def update(grads, state, params=None):
+        if weight_decay and params is not None:
+            grads = jax.tree_util.tree_map(
+                lambda g, p: g + weight_decay * p.astype(g.dtype), grads, params)
+        if momentum:
+            mom = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g.astype(jnp.float32), state.momentum, grads)
+            if nesterov:
+                grads = jax.tree_util.tree_map(
+                    lambda m, g: momentum * m + g.astype(jnp.float32), mom, grads)
+            else:
+                grads = mom
+        else:
+            mom = state.momentum
+        lr = _lr(learning_rate, state.step)
+        updates = jax.tree_util.tree_map(lambda g: -lr * g, grads)
+        return updates, SGDState(step=state.step + 1, momentum=mom)
+
+    return GradientTransformation(init, update)
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: object
+    nu: object
+
+
+def adam(learning_rate: ScalarOrSchedule, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0) -> GradientTransformation:
+    """Adam; with weight_decay>0 it is decoupled AdamW."""
+
+    def init(params):
+        mu = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        nu = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return AdamState(step=jnp.zeros((), jnp.int32), mu=mu, nu=nu)
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = _lr(learning_rate, state.step)
+
+        def upd(m, v, p):
+            u = -lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay and p is not None:
+                u = u - lr * weight_decay * p.astype(jnp.float32)
+            return u
+
+        if params is None:
+            updates = jax.tree_util.tree_map(lambda m, v: upd(m, v, None), mu, nu)
+        else:
+            updates = jax.tree_util.tree_map(upd, mu, nu, params)
+        return updates, AdamState(step=step, mu=mu, nu=nu)
+
+    return GradientTransformation(init, update)
+
+
+def adamw(learning_rate: ScalarOrSchedule, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.01) -> GradientTransformation:
+    return adam(learning_rate, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay)

@@ -1,0 +1,33 @@
+"""Learning-rate schedules as step -> lr callables (jit-safe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    def schedule(step):
+        return jnp.asarray(value, jnp.float32)
+
+    return schedule
+
+
+def cosine_decay(init_value: float, decay_steps: int, alpha: float = 0.0):
+    def schedule(step):
+        t = jnp.minimum(step.astype(jnp.float32), decay_steps) / decay_steps
+        cosine = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return init_value * ((1 - alpha) * cosine + alpha)
+
+    return schedule
+
+
+def linear_warmup_cosine(peak_value: float, warmup_steps: int, total_steps: int,
+                         end_value: float = 0.0):
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = peak_value * step / jnp.maximum(1.0, warmup_steps)
+        t = jnp.clip((step - warmup_steps) / jnp.maximum(1.0, total_steps - warmup_steps),
+                     0.0, 1.0)
+        cos = end_value + (peak_value - end_value) * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return schedule

@@ -1,0 +1,90 @@
+"""Minimal optax-like gradient-transformation combinators.
+
+A ``GradientTransformation`` is a pair of pure functions:
+
+  init(params)                 -> state
+  update(grads, state, params) -> (updates, state)
+
+``apply_updates(params, updates)`` adds the (already-negated) updates.
+Everything is a pytree; everything jits.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+class GradientTransformation(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Optional[Any]], tuple]
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)) if u is not None else p, params, updates
+    )
+
+
+def chain(*transforms: GradientTransformation) -> GradientTransformation:
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(grads, state, params=None):
+        new_state = []
+        for t, s in zip(transforms, state):
+            grads, s = t.update(grads, s, params)
+            new_state.append(s)
+        return grads, tuple(new_state)
+
+    return GradientTransformation(init, update)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransformation:
+    def init(params):
+        del params
+        return ()
+
+    def update(grads, state, params=None):
+        del params
+        norm = global_norm(grads)
+        factor = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+        return jax.tree_util.tree_map(lambda g: g * factor, grads), state
+
+    return GradientTransformation(init, update)
+
+
+def scale(factor: float) -> GradientTransformation:
+    def init(params):
+        del params
+        return ()
+
+    def update(grads, state, params=None):
+        del params
+        return jax.tree_util.tree_map(lambda g: g * factor, grads), state
+
+    return GradientTransformation(init, update)
+
+
+class ScaleByScheduleState(NamedTuple):
+    step: jnp.ndarray
+
+
+def scale_by_schedule(schedule: Callable[[jnp.ndarray], jnp.ndarray]) -> GradientTransformation:
+    def init(params):
+        del params
+        return ScaleByScheduleState(step=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params=None):
+        del params
+        s = schedule(state.step)
+        grads = jax.tree_util.tree_map(lambda g: g * s, grads)
+        return grads, ScaleByScheduleState(step=state.step + 1)
+
+    return GradientTransformation(init, update)

@@ -1,0 +1,290 @@
+"""Scan-aware cost extraction from post-SPMD optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE (verified in
+EXPERIMENTS.md §Dry-run) — useless for scanned layer stacks. This module
+re-derives the three roofline inputs directly from ``compiled.as_text()``:
+
+* dot FLOPs        — every ``dot`` op: 2 · |output| · K (K = contracted size
+                     from the lhs operand's shape and lhs_contracting_dims);
+* HBM traffic      — per *top-level* op in each executed computation:
+                     Σ operand sizes + output size. Ops inside fused
+                     computations are not separate kernels and are excluded
+                     (their traffic is the fusion node's operands/outputs);
+* collective bytes — output sizes of all-gather / all-reduce /
+                     reduce-scatter / all-to-all / collective-permute ops.
+
+All quantities are multiplied through the call graph: while bodies by their
+``known_trip_count`` backend config, fusions/calls/conditionals by 1. The
+HLO is the per-device partitioned module, so every number is PER DEVICE.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    dims = m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    out_type: str
+    operands: List[str]
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    # name -> type string, includes parameters
+    symbols: Dict[str, str] = field(default_factory=dict)
+
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_OP_LINE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*([\w\-]+)\((.*)")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_TRIP = re.compile(r"\"known_trip_count\":\{\"n\":\"(\d+)\"\}")
+_CALL_ATTR = re.compile(r"(?:condition|body|to_apply|calls)=%?([\w.\-]+)")
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if not s or s.startswith("//") or s.startswith("HloModule"):
+            continue
+        hm = _COMP_HEADER.match(s)
+        if hm and s.endswith("{"):
+            cur = Computation(hm.group(1))
+            comps[cur.name] = cur
+            # parse parameter declarations: name: type
+            for pname, ptype in re.findall(r"([\w.\-]+):\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)", hm.group(2)):
+                cur.symbols[pname] = ptype
+            continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        om = _OP_LINE.match(s)
+        if om:
+            name, otype, kind, rest = om.groups()
+            # operand names: up to the closing paren of the op call — take
+            # all %refs before any attribute section; good enough because
+            # attrs reference computations which we track separately.
+            paren = rest.split("),")[0]
+            operands = _OPERAND.findall(paren)
+            cur.symbols[name] = otype
+            cur.ops.append(Op(name, kind, otype, operands, s))
+    return comps
+
+
+@dataclass
+class HloCost:
+    dot_flops: float = 0.0
+    traffic_bytes: float = 0.0
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+    collective_counts: Dict[str, int] = field(default_factory=dict)
+    dot_count: int = 0
+    while_trip_counts: List[int] = field(default_factory=list)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    def as_dict(self) -> dict:
+        return {
+            "dot_flops": self.dot_flops,
+            "traffic_bytes": self.traffic_bytes,
+            "collective_bytes": dict(self.collective_bytes),
+            "collective_counts": dict(self.collective_counts),
+            "total_collective_bytes": self.total_collective_bytes,
+            "dot_count": self.dot_count,
+            "while_trip_counts": self.while_trip_counts,
+        }
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_elems = _shape_elems(op.out_type)
+    # contracted size from lhs shape and lhs_contracting_dims
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+    if not m or not op.operands:
+        return 2.0 * out_elems  # fallback: rank-0 contraction
+    lhs_type = comp.symbols.get(op.operands[0])
+    if lhs_type is None:
+        return 2.0 * out_elems
+    dims = _shape_dims(lhs_type)
+    k = 1
+    if m.group(1):
+        for i in m.group(1).split(","):
+            idx = int(i)
+            if idx < len(dims):
+                k *= dims[idx]
+    # batch dims are shared between output and lhs — already in out_elems
+    return 2.0 * out_elems * k
+
+
+_SLICE_KINDS = ("dynamic-slice", "gather", "dynamic-update-slice", "slice")
+_DUS_KINDS = ("dynamic-update-slice",)
+
+
+def _marked_comps(comps: Dict[str, Computation], kinds) -> set:
+    """Computations that (transitively through fusion calls) contain one of
+    ``kinds`` — used to cap phantom traffic: a dynamic-slice of stacked scan
+    params reads one layer, not the whole stack; a dynamic-update-slice
+    writes one layer's slice into an aliased buffer."""
+    direct = set()
+    calls: Dict[str, List[str]] = {}
+    for name, comp in comps.items():
+        calls[name] = []
+        for op in comp.ops:
+            if op.kind in kinds:
+                direct.add(name)
+            for _, callee in re.findall(r"(calls|to_apply)=%?([\w.\-]+)", op.line):
+                calls[name].append(callee)
+    changed = True
+    while changed:
+        changed = False
+        for name, callees in calls.items():
+            if name not in direct and any(c in direct for c in callees):
+                direct.add(name)
+                changed = True
+    return direct
+
+
+def _sliceish_comps(comps: Dict[str, Computation]) -> set:
+    return _marked_comps(comps, _SLICE_KINDS)
+
+
+def analyze_hlo_text(text: str) -> HloCost:
+    comps = parse_hlo(text)
+    sliceish = _sliceish_comps(comps)
+    dusish = _marked_comps(comps, _DUS_KINDS)
+    cost = HloCost()
+    cost.collective_bytes = {k: 0.0 for k in _COLLECTIVES}
+    cost.collective_counts = {k: 0 for k in _COLLECTIVES}
+
+    entry = None
+    for name in comps:
+        if name.startswith("main") or ".main" in name:
+            entry = name
+    if entry is None:  # fall back: the computation containing a while/most ops
+        entry = max(comps, key=lambda n: len(comps[n].ops))
+
+    # computations reached via fusion `calls=`/`to_apply` are NOT separate
+    # kernels: their dots count (with the caller's multiplier) but their op
+    # traffic does not.
+    from collections import deque
+
+    # (comp, multiplier, is_kernel_level)
+    queue = deque([(entry, 1.0, True)])
+    seen_mult: Dict[Tuple[str, bool], float] = {}
+    while queue:
+        cname, mult, kernel_level = queue.popleft()
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        key = (cname, kernel_level)
+        seen_mult[key] = seen_mult.get(key, 0.0) + mult
+        if seen_mult[key] - mult > 0:
+            pass  # accumulate repeated call sites
+        for op in comp.ops:
+            base = op.kind
+            if base == "dot":
+                cost.dot_flops += mult * _dot_flops(op, comp)
+                cost.dot_count += 1
+            if any(base == c or base == c + "-start" for c in _COLLECTIVES):
+                kind = base.replace("-start", "")
+                b = _shape_bytes(op.out_type)
+                cost.collective_bytes[kind] += mult * b
+                cost.collective_counts[kind] += max(int(mult), 1)
+            if kernel_level and base not in ("parameter", "constant",
+                                             "get-tuple-element", "tuple",
+                                             "bitcast", "while"):
+                out_b = _shape_bytes(op.out_type)
+                callee = None
+                if base == "fusion":
+                    m = re.search(r"calls=%?([\w.\-]+)", op.line)
+                    callee = m.group(1) if m else None
+                is_dus = base in _DUS_KINDS or (callee in dusish)
+                is_slice = base in _SLICE_KINDS or (callee in sliceish)
+                operand_bytes = []
+                for o in op.operands:
+                    t = comp.symbols.get(o)
+                    if t:
+                        operand_bytes.append(_shape_bytes(t))
+                if is_dus and operand_bytes:
+                    # aliased in-place update: the big buffer is neither fully
+                    # read nor fully written — traffic ≈ the update slice(s)
+                    opb = sum(operand_bytes) - max(operand_bytes)
+                else:
+                    # slicing kernels read ≤ their output; any other kernel
+                    # reading ≫ it writes is touching a stacked staging
+                    # buffer — cap at 4× output (allows genuine reductions)
+                    cap = out_b if is_slice else 4 * out_b
+                    opb = out_b + sum(min(b, cap) for b in operand_bytes)
+                cost.traffic_bytes += mult * opb
+            # call edges
+            trip = None
+            tm = _TRIP.search(op.line)
+            if tm:
+                trip = int(tm.group(1))
+            for attr, callee in re.findall(r"(condition|body|to_apply|calls)=%?([\w.\-]+)", op.line):
+                if attr == "body" and trip is not None:
+                    cost.while_trip_counts.append(trip)
+                    queue.append((callee, mult * trip, True))
+                elif attr == "condition":
+                    queue.append((callee, mult * (trip or 1), False))
+                elif attr == "calls":          # fusion: dots yes, traffic no
+                    queue.append((callee, mult, False))
+                elif attr == "to_apply":       # reduce/map lambdas: negligible
+                    continue
+    return cost

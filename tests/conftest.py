@@ -1,0 +1,10 @@
+import os
+import sys
+
+# tests run on the single host device; the dry-run (and only the dry-run)
+# forces 512 placeholder devices in its own process
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_platform_name", "cpu")

@@ -1,0 +1,81 @@
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.int32)}}
+    save_checkpoint(str(tmp_path), 7, tree, {"note": "x"})
+    restored, meta = load_checkpoint(str(tmp_path), tree)
+    assert meta["step"] == 7 and meta["note"] == "x"
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype
+
+
+def test_latest_step(tmp_path):
+    tree = {"a": jnp.zeros(2)}
+    assert latest_step(str(tmp_path)) is None
+    save_checkpoint(str(tmp_path), 1, tree)
+    save_checkpoint(str(tmp_path), 12, tree)
+    assert latest_step(str(tmp_path)) == 12
+
+
+# ------------------------------------------------------------ sharding -----
+def test_param_specs_respect_divisibility():
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.launch.sharding import param_spec
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        class devices:
+            shape = (16, 16)
+
+    mesh = FakeMesh()
+    # vocab 256000 div 16 → model on dim0; d_model 3072 div 16 → data on dim1
+    assert param_spec(["embed", "tok"], (256000, 3072), mesh) == P("model", "data")
+    # stacked block param: leading L dim never sharded
+    spec = param_spec(["blocks", "ffn", "w_up"], (28, 3072, 24576), mesh)
+    assert spec[0] is None and "model" in spec
+    # indivisible dims → replicated
+    assert param_spec(["x"], (7, 13), mesh) == P(None, None)
+    # bias vector
+    assert param_spec(["attn", "b_q"], (4096,), mesh) == P("model")
+
+
+def test_cache_specs():
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.sharding import cache_spec
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        class devices:
+            shape = (16, 16)
+
+    mesh = FakeMesh()
+    # (L, B, S, hkv, dh): batch over data, dh over model, S never sharded
+    spec = cache_spec(["blocks", "k"], (126, 128, 32768, 8, 128), mesh)
+    assert spec[1] == "data"
+    assert spec[2] is None
+    assert spec[4] == "model"
+
+
+def test_batch_specs():
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.sharding import batch_spec
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        class devices:
+            shape = (16, 16)
+
+    m = FakeMesh()
+    assert batch_spec((256, 4096), m) == P("data", None)
+    assert batch_spec((1, 524288), m) == P(None, None)

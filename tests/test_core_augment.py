@@ -1,0 +1,56 @@
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.augment import (strong_augment_image, tab_augment_pair,
+                                weak_augment_image, weak_augment_tab)
+
+
+def test_weak_image_preserves_shape_and_range():
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 32, 32, 3))
+    y = weak_augment_image(jax.random.PRNGKey(1), x)
+    assert y.shape == x.shape
+    # flips/translations don't change the value set much
+    assert float(jnp.abs(y).max()) <= float(jnp.abs(x).max()) + 1e-5
+
+
+def test_strong_image_differs_from_weak():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 32, 32, 3))
+    k = jax.random.PRNGKey(1)
+    w = weak_augment_image(k, x)
+    s = strong_augment_image(k, x)
+    assert float(jnp.abs(w - s).mean()) > 0.01
+
+
+@settings(max_examples=10, deadline=None)
+@given(r_m=st.floats(0.05, 0.6), seed=st.integers(0, 1000))
+def test_property_tab_mask_ratio(r_m, seed):
+    """Eq. 5: mask elements ~ Bernoulli(r_m) — empirical rate within 5σ."""
+    x = jnp.ones((64, 100)) * 7.0
+    mean = jnp.zeros((100,))
+    weak = weak_augment_tab(jax.random.PRNGKey(seed), x, mean, r_m)
+    rate = float((weak == 0.0).mean())   # masked → replaced by mean=0
+    sigma = (r_m * (1 - r_m) / 6400) ** 0.5
+    assert abs(rate - r_m) < 5 * sigma + 1e-3
+
+
+def test_tab_pair_shares_mask():
+    """The paper samples ONE mask for both augmentations (Eq. 6):
+    strong − weak must be pure Gaussian noise (no differing mask)."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 23)) + 5.0
+    mean = jnp.zeros((23,))
+    weak, strong = tab_augment_pair(jax.random.PRNGKey(1), x, mean,
+                                    mask_ratio=0.3, sigma=0.1)
+    diff = strong - weak
+    # noise is N(0, 0.1²): no structural (masking) differences
+    assert float(jnp.abs(diff).max()) < 0.1 * 6
+    assert float(diff.std()) == pytest.approx(0.1, rel=0.3)
+
+
+def test_tab_weak_uses_feature_mean():
+    x = jnp.ones((8, 4)) * 3.0
+    mean = jnp.array([10.0, 20.0, 30.0, 40.0])
+    weak = weak_augment_tab(jax.random.PRNGKey(0), x, mean, mask_ratio=0.9)
+    vals = set(float(v) for v in jnp.unique(weak))
+    assert vals <= {3.0, 10.0, 20.0, 30.0, 40.0}

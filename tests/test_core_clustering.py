@@ -1,0 +1,68 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.clustering import (align_pseudo_to_true, cluster_purity,
+                                   gradient_pseudo_labels, kmeans)
+
+
+def _separable_gradients(key, n, c, d, noise=0.05):
+    """Synthetic partial gradients: per-class direction + noise — the
+    structure the paper's step ③ relies on."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    dirs = jax.random.normal(k1, (c, d))
+    dirs = dirs / jnp.linalg.norm(dirs, axis=1, keepdims=True)
+    labels = jax.random.randint(k2, (n,), 0, c)
+    g = dirs[labels] + noise * jax.random.normal(k3, (n, d))
+    return g, labels
+
+
+def test_kmeans_recovers_separable_classes():
+    g, labels = _separable_gradients(jax.random.PRNGKey(0), 400, 10, 64)
+    pseudo = gradient_pseudo_labels(jax.random.PRNGKey(1), g, 10)
+    assert cluster_purity(pseudo, labels, 10) > 0.95
+
+
+def test_kmeans_pallas_path_matches_jnp():
+    g, _ = _separable_gradients(jax.random.PRNGKey(2), 200, 5, 32)
+    a1, _ = kmeans(jax.random.PRNGKey(3), g, 5, use_kernel=False)
+    a2, _ = kmeans(jax.random.PRNGKey(3), g, 5, use_kernel=True)
+    assert jnp.array_equal(a1, a2)
+
+
+def test_purity_bounds():
+    pseudo = jnp.array([0, 0, 1, 1])
+    true = jnp.array([1, 1, 0, 0])
+    assert cluster_purity(pseudo, true, 2) == 1.0   # permutation-invariant
+    true2 = jnp.array([0, 1, 0, 1])
+    assert cluster_purity(pseudo, true2, 2) == 0.5
+
+
+def test_align_pseudo_to_true():
+    pseudo = jnp.array([0, 0, 1, 1, 2, 2])
+    true = jnp.array([2, 2, 0, 0, 1, 1])
+    aligned = align_pseudo_to_true(pseudo, true, 3)
+    assert jnp.array_equal(aligned, true)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100), c=st.integers(2, 6))
+def test_property_kmeans_labels_in_range(seed, c):
+    g, _ = _separable_gradients(jax.random.PRNGKey(seed), 64, c, 16)
+    pseudo = gradient_pseudo_labels(jax.random.PRNGKey(seed + 1), g, c,
+                                    num_iters=5)
+    assert int(pseudo.min()) >= 0
+    assert int(pseudo.max()) < c
+
+
+@settings(max_examples=5, deadline=None)
+@given(scale=st.floats(0.5, 20.0))
+def test_property_kmeans_scale_invariant(scale):
+    """Gradient magnitude encodes confidence, not class — clustering must be
+    invariant to global rescaling (cosine k-means)."""
+    g, _ = _separable_gradients(jax.random.PRNGKey(7), 128, 4, 16)
+    a1, _ = kmeans(jax.random.PRNGKey(8), g, 4)
+    a2, _ = kmeans(jax.random.PRNGKey(8), g * scale, 4)
+    assert jnp.array_equal(a1, a2)

@@ -1,0 +1,119 @@
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.estimator import (estimate_missing_parties, infer_prob,
+                                  sdpa_transform)
+from repro.core.ssl import SSLConfig, cross_entropy, ssl_loss
+
+
+# ------------------------------------------------------------ SSL loss -----
+def _linear_logits(params, x):
+    return x @ params["w"]
+
+
+def test_ssl_loss_components():
+    key = jax.random.PRNGKey(0)
+    params = {"w": 0.1 * jax.random.normal(key, (23, 4))}
+    cfg = SSLConfig(modality="tabular", lambda_u=1.0, confidence_threshold=0.0)
+    xl = jax.random.normal(jax.random.PRNGKey(1), (16, 23))
+    yl = jax.random.randint(jax.random.PRNGKey(2), (16,), 0, 4)
+    xu = jax.random.normal(jax.random.PRNGKey(3), (32, 23))
+    loss, metrics = ssl_loss(_linear_logits, params, jax.random.PRNGKey(4),
+                             xl, yl, xu, cfg, feature_mean=jnp.zeros(23))
+    assert float(loss) > 0
+    assert metrics["pseudo_mask_rate"] == 1.0   # threshold 0 → all pass
+    assert float(metrics["l_s"]) > 0 and float(metrics["l_u"]) >= 0
+
+
+def test_ssl_threshold_gates_unsupervised():
+    params = {"w": 1e-4 * jnp.ones((23, 4))}   # near-uniform predictions
+    cfg = SSLConfig(modality="tabular", confidence_threshold=0.99)
+    xl = jnp.ones((8, 23))
+    yl = jnp.zeros((8,), jnp.int32)
+    xu = jnp.ones((8, 23))
+    loss, metrics = ssl_loss(_linear_logits, params, jax.random.PRNGKey(0),
+                             xl, yl, xu, cfg, feature_mean=jnp.zeros(23))
+    assert float(metrics["pseudo_mask_rate"]) == 0.0
+    assert float(metrics["l_u"]) == 0.0
+
+
+def test_ssl_training_reduces_loss():
+    key = jax.random.PRNGKey(0)
+    w_true = jax.random.normal(key, (10, 3))
+    x = jax.random.normal(jax.random.PRNGKey(1), (128, 10))
+    y = jnp.argmax(x @ w_true, axis=-1)
+    params = {"w": jnp.zeros((10, 3))}
+    cfg = SSLConfig(modality="tabular", lambda_u=0.5, confidence_threshold=0.8)
+    fm = x.mean(0)
+    losses = []
+    for i in range(60):
+        def lf(p):
+            return ssl_loss(_linear_logits, p, jax.random.PRNGKey(i),
+                            x[:64], y[:64], x[64:], cfg, feature_mean=fm)[0]
+        g = jax.grad(lf)(params)
+        params = {"w": params["w"] - 0.5 * g["w"]}
+        losses.append(float(lf(params)))
+    assert losses[-1] < losses[0] * 0.7
+
+
+# --------------------------------------------------------- SDPA (Eq. 10) ---
+def test_sdpa_transform_matches_manual():
+    k = jax.random.PRNGKey(0)
+    hu = jax.random.normal(k, (7, 8))
+    hoa = jax.random.normal(jax.random.PRNGKey(1), (5, 8))
+    hob = jax.random.normal(jax.random.PRNGKey(2), (5, 12))
+    got = sdpa_transform(hu, hoa, hob)
+    w = jax.nn.softmax(hu @ hoa.T / jnp.sqrt(8.0), axis=-1)
+    assert jnp.allclose(got, w @ hob, atol=1e-5)
+    assert got.shape == (7, 12)
+
+
+def test_sdpa_kernel_path_matches():
+    hu = jax.random.normal(jax.random.PRNGKey(0), (33, 16))
+    hoa = jax.random.normal(jax.random.PRNGKey(1), (21, 16))
+    hob = jax.random.normal(jax.random.PRNGKey(2), (21, 24))
+    a = sdpa_transform(hu, hoa, hob, use_kernel=False)
+    b = sdpa_transform(hu, hoa, hob, use_kernel=True)
+    assert jnp.allclose(a, b, atol=1e-4)
+
+
+def test_sdpa_rows_are_convex_combinations():
+    """Each estimated rep is a weighted average of overlap reps — it must lie
+    inside their bounding box."""
+    hu = jax.random.normal(jax.random.PRNGKey(0), (50, 6))
+    hoa = jax.random.normal(jax.random.PRNGKey(1), (9, 6))
+    hob = jax.random.normal(jax.random.PRNGKey(2), (9, 4))
+    est = sdpa_transform(hu, hoa, hob)
+    assert float(est.max()) <= float(hob.max()) + 1e-5
+    assert float(est.min()) >= float(hob.min()) - 1e-5
+
+
+def test_estimate_missing_parties_k3():
+    h = [jax.random.normal(jax.random.PRNGKey(i), (6, 8)) for i in range(3)]
+    hu = jax.random.normal(jax.random.PRNGKey(9), (11, 8))
+    est = estimate_missing_parties(hu, h, k=1)
+    assert len(est) == 2
+    assert est[0].shape == (11, 8) and est[1].shape == (11, 8)
+
+
+# ----------------------------------------------------- infer_prob (Eq. 9) --
+def test_infer_prob_agreement_and_threshold():
+    n, c = 6, 3
+    strong = 50.0
+    local_logits = jnp.eye(c)[jnp.array([0, 0, 1, 2, 2, 1])] * strong
+    joint_logits = jnp.eye(c)[jnp.array([0, 1, 1, 2, 0, 1])] * strong
+    p = infer_prob(lambda h: local_logits, lambda h: joint_logits,
+                   jnp.zeros((n, 4)), jnp.zeros((n, 8)), threshold=0.9)
+    agree = jnp.array([1, 0, 1, 1, 0, 1])
+    assert jnp.allclose((p > 0).astype(jnp.int32), agree)
+    # p equals joint confidence where gated on
+    assert float(p[0]) == pytest.approx(float(jax.nn.softmax(joint_logits[0])[0]), rel=1e-5)
+
+
+def test_infer_prob_low_confidence_zero():
+    n, c = 4, 3
+    logits = jnp.zeros((n, c))    # uniform → max prob 1/3 < 0.9
+    p = infer_prob(lambda h: logits, lambda h: logits,
+                   jnp.zeros((n, 4)), jnp.zeros((n, 8)), threshold=0.9)
+    assert jnp.allclose(p, 0.0)

@@ -1,0 +1,34 @@
+"""Integration: the dry-run driver end-to-end in a subprocess (it must own
+the 512-device XLA flag, which cannot be set in this test process)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("mamba2-370m", "long_500k"),      # fastest-compiling pair
+])
+def test_dryrun_subprocess_produces_record(tmp_path, arch, shape):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", arch, "--shape", shape, "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=420)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    path = tmp_path / f"{arch}__{shape}__16x16.json"
+    assert path.exists(), proc.stdout
+    rec = json.loads(path.read_text())
+    assert rec["mesh"] == "16x16"
+    assert rec["num_params"] > 1e8
+    for key in ("compute_s", "memory_s", "collective_s", "bottleneck"):
+        assert key in rec["roofline"]
+    ha = rec["hlo_analysis"]
+    assert ha["dot_flops"] > 0
+    assert ha["traffic_bytes"] > 0

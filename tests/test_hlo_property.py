@@ -1,0 +1,88 @@
+"""Property tests: the scan-aware HLO analyzer must recover exact dot FLOPs
+for arbitrary compositions of matmuls, scans and nested scans."""
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.roofline.hlo_analysis import analyze_hlo_text
+
+
+def _flops_of(fn, *args):
+    comp = jax.jit(fn).lower(*args).compile()
+    return analyze_hlo_text(comp.as_text()).dot_flops
+
+
+@settings(max_examples=8, deadline=None)
+@given(trips=st.integers(1, 12), m=st.sampled_from([64, 128, 256]))
+def test_scan_matmul_flops_exact(trips, m):
+    def f(x, ws):
+        def body(c, w):
+            return c @ w, ()
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+
+    x = jax.ShapeDtypeStruct((m, m), jnp.float32)
+    ws = jax.ShapeDtypeStruct((trips, m, m), jnp.float32)
+    assert _flops_of(f, x, ws) == trips * 2 * m ** 3
+
+
+@settings(max_examples=5, deadline=None)
+@given(outer=st.integers(1, 5), inner=st.integers(1, 5))
+def test_nested_scan_flops_exact(outer, inner):
+    m = 64
+
+    def f(x, ws):
+        def o_body(c, w):
+            def i_body(ci, _):
+                return ci @ w, ()
+            ci, _ = jax.lax.scan(i_body, c, None, length=inner)
+            return ci, ()
+        y, _ = jax.lax.scan(o_body, x, ws)
+        return y
+
+    x = jax.ShapeDtypeStruct((m, m), jnp.float32)
+    ws = jax.ShapeDtypeStruct((outer, m, m), jnp.float32)
+    assert _flops_of(f, x, ws) == outer * inner * 2 * m ** 3
+
+
+def test_mixed_scan_plus_outside_matmul():
+    m = 128
+
+    def f(x, ws, a):
+        def body(c, w):
+            return c @ w, ()
+        y, _ = jax.lax.scan(body, x, ws)
+        return y @ a
+
+    x = jax.ShapeDtypeStruct((m, m), jnp.float32)
+    ws = jax.ShapeDtypeStruct((3, m, m), jnp.float32)
+    a = jax.ShapeDtypeStruct((m, 2 * m), jnp.float32)
+    got = _flops_of(f, x, ws, a)
+    assert got == 3 * 2 * m ** 3 + 2 * m * m * 2 * m
+
+
+def test_batched_dot_flops():
+    def f(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b)
+
+    a = jax.ShapeDtypeStruct((4, 32, 48), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 48, 16), jnp.float32)
+    assert _flops_of(f, a, b) == 4 * 2 * 32 * 48 * 16
+
+
+def test_traffic_positive_and_bounded():
+    """Traffic estimate is an upper bound ≥ the unavoidable IO (inputs +
+    outputs, once each)."""
+    m = 256
+
+    def f(a, b):
+        return a @ b
+
+    a = jax.ShapeDtypeStruct((m, m), jnp.float32)
+    b = jax.ShapeDtypeStruct((m, m), jnp.float32)
+    comp = jax.jit(f).lower(a, b).compile()
+    cost = analyze_hlo_text(comp.as_text())
+    unavoidable = 3 * m * m * 4
+    assert cost.traffic_bytes >= unavoidable
+    assert cost.traffic_bytes <= 4 * unavoidable

@@ -1,0 +1,74 @@
+"""HLO analyzer: scan-aware FLOP/collective extraction correctness."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.roofline.analysis import HW, active_params, model_flops, roofline_terms
+from repro.roofline.hlo_analysis import analyze_hlo_text
+
+
+def test_scan_flops_exact():
+    def f(x, ws):
+        def body(c, w):
+            return c @ w, ()
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    ws = jax.ShapeDtypeStruct((7, 256, 256), jnp.float32)
+    cost = analyze_hlo_text(jax.jit(f).lower(x, ws).compile().as_text())
+    assert cost.dot_flops == 7 * 2 * 256 ** 3
+    assert cost.while_trip_counts == [7]
+
+
+def test_nested_scan_flops():
+    def f(x, ws):
+        def outer(c, w):
+            def inner(ci, _):
+                return ci @ w, ()
+            ci, _ = jax.lax.scan(inner, c, None, length=3)
+            return ci, ()
+        y, _ = jax.lax.scan(outer, x, ws)
+        return y
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((5, 128, 128), jnp.float32)
+    cost = analyze_hlo_text(jax.jit(f).lower(x, ws).compile().as_text())
+    assert cost.dot_flops == 5 * 3 * 2 * 128 ** 3
+
+
+def test_unscanned_matmul_flops():
+    def f(a, b):
+        return a @ b
+
+    a = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+    b = jax.ShapeDtypeStruct((32, 48), jnp.float32)
+    cost = analyze_hlo_text(jax.jit(f).lower(a, b).compile().as_text())
+    assert cost.dot_flops == 2 * 64 * 32 * 48
+
+
+def test_roofline_terms_bottleneck():
+    t = roofline_terms({"dot_flops": 197e12, "traffic_bytes": 1e9,
+                        "collective_bytes": 0})
+    assert t["bottleneck"] == "compute"
+    assert t["compute_s"] == pytest.approx(1.0)
+    t2 = roofline_terms({"dot_flops": 1e9, "traffic_bytes": 819e9,
+                         "collective_bytes": 0})
+    assert t2["bottleneck"] == "memory"
+
+
+def test_active_params_dense_plausible():
+    from repro.configs import get_config
+    n = active_params(get_config("llama3-405b"))
+    assert 3.8e11 < n < 4.4e11      # ~405B
+
+    n_moe = active_params(get_config("granite-moe-3b-a800m"))
+    assert n_moe < 1.5e9            # active ≪ total for MoE
+
+
+def test_model_flops_train_vs_decode():
+    from repro.configs import INPUT_SHAPES, get_config
+    cfg = get_config("gemma-7b")
+    tr = model_flops(cfg, INPUT_SHAPES["train_4k"])
+    de = model_flops(cfg, INPUT_SHAPES["decode_32k"])
+    assert tr > de * 1000           # train step ≫ one decode token

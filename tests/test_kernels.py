@@ -1,0 +1,95 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention import ops as dec_ops, ref as dec_ref
+from repro.kernels.kmeans import ops as km_ops, ref as km_ref
+from repro.kernels.sdpa_estimator import ops as sdpa_ops, ref as sdpa_ref
+
+
+# ----------------------------------------------------------------- kmeans --
+@pytest.mark.parametrize("n,d,c", [
+    (100, 32, 10), (257, 130, 7), (1024, 128, 10), (33, 5, 3),
+    (8, 1, 2), (512, 256, 100),
+])
+def test_kmeans_assign_matches_ref(n, d, c):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(n + d + c))
+    x = jax.random.normal(k1, (n, d))
+    cen = jax.random.normal(k2, (c, d))
+    assert np.array_equal(np.asarray(km_ops.kmeans_assign(x, cen)),
+                          np.asarray(km_ref.kmeans_assign(x, cen)))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kmeans_dtypes(dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 16)).astype(dtype)
+    cen = jax.random.normal(jax.random.PRNGKey(1), (4, 16)).astype(dtype)
+    got = km_ops.kmeans_assign(x, cen)
+    want = km_ref.kmeans_assign(x, cen)
+    assert float(np.mean(np.asarray(got) == np.asarray(want))) > 0.98
+
+
+# ------------------------------------------------------------------- sdpa --
+@pytest.mark.parametrize("nu,no,d,db", [
+    (100, 50, 32, 48), (513, 200, 128, 128), (7, 3, 5, 9),
+    (1000, 64, 64, 96), (256, 256, 256, 32),
+])
+def test_sdpa_matches_ref(nu, no, d, db):
+    ks = jax.random.split(jax.random.PRNGKey(nu + no), 3)
+    hu = jax.random.normal(ks[0], (nu, d))
+    hoa = jax.random.normal(ks[1], (no, d))
+    hob = jax.random.normal(ks[2], (no, db))
+    got = sdpa_ops.sdpa_estimate(hu, hoa, hob)
+    want = sdpa_ref.sdpa_estimate(hu, hoa, hob)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sdpa_dtypes(dtype):
+    hu = jax.random.normal(jax.random.PRNGKey(0), (65, 32)).astype(dtype)
+    hoa = jax.random.normal(jax.random.PRNGKey(1), (33, 32)).astype(dtype)
+    hob = jax.random.normal(jax.random.PRNGKey(2), (33, 16)).astype(dtype)
+    got = sdpa_ops.sdpa_estimate(hu, hoa, hob)
+    want = sdpa_ref.sdpa_estimate(hu, hoa, hob)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-2, rtol=3e-2)
+
+
+def test_sdpa_large_asymmetric():
+    """The few-shot regime: N_u ≫ N_o."""
+    hu = jax.random.normal(jax.random.PRNGKey(0), (4096, 128))
+    hoa = jax.random.normal(jax.random.PRNGKey(1), (128, 128))
+    hob = jax.random.normal(jax.random.PRNGKey(2), (128, 128))
+    got = sdpa_ops.sdpa_estimate(hu, hoa, hob)
+    want = sdpa_ref.sdpa_estimate(hu, hoa, hob)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ------------------------------------------------------------ decode attn --
+@pytest.mark.parametrize("b,h,hkv,s,dh", [
+    (2, 8, 2, 128, 64), (1, 16, 16, 300, 128), (3, 12, 4, 1024, 32),
+    (2, 4, 1, 77, 80),
+])
+def test_decode_attention_matches_ref(b, h, hkv, s, dh):
+    ks = jax.random.split(jax.random.PRNGKey(b * h + s), 3)
+    q = jax.random.normal(ks[0], (b, h, dh))
+    kc = jax.random.normal(ks[1], (b, hkv, s, dh))
+    vc = jax.random.normal(ks[2], (b, hkv, s, dh))
+    got = dec_ops.decode_attention(q, kc, vc)
+    want = dec_ref.decode_attention(q, kc, vc)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_bf16_cache():
+    q = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 64))
+    kc = jax.random.normal(jax.random.PRNGKey(1), (2, 2, 256, 64)).astype(jnp.bfloat16)
+    vc = jax.random.normal(jax.random.PRNGKey(2), (2, 2, 256, 64)).astype(jnp.bfloat16)
+    got = dec_ops.decode_attention(q, kc, vc)
+    want = dec_ref.decode_attention(q, kc, vc)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-2, rtol=3e-2)

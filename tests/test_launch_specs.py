@@ -1,0 +1,67 @@
+"""input_specs coverage: every (arch × shape) pair yields a well-formed spec
+tree (the dry-run's contract), plus decode-cache consistency."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import INPUT_SHAPES, all_configs, get_config
+from repro.launch import specs as SP
+from repro.launch.dryrun import config_for
+from repro.models.model_zoo import build_model
+
+ARCHS = sorted(all_configs())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("shape_name", list(INPUT_SHAPES))
+def test_specs_shapes(arch, shape_name):
+    shape = INPUT_SHAPES[shape_name]
+    cfg = config_for(arch, shape)
+    if shape.kind == "train":
+        spec = SP.train_specs(cfg, shape)
+        assert spec["tokens"].shape[0] == shape.global_batch
+        total = spec["tokens"].shape[1] + (
+            spec["embeds"].shape[1] if "embeds" in spec else 0)
+        assert total == shape.seq_len
+        assert spec["labels"].shape == spec["tokens"].shape
+    elif shape.kind == "prefill":
+        spec = SP.prefill_specs(cfg, shape)
+        assert "labels" not in spec
+    else:
+        spec = SP.decode_specs(cfg, shape)
+        assert spec["token"].shape == (shape.global_batch, 1)
+        # cache tree must be constructible for the full seq_len
+        cache = build_model(cfg).cache_shapes(shape.global_batch, shape.seq_len)
+        leaves = jax.tree_util.tree_leaves(cache)
+        assert leaves, "empty cache tree"
+        # sliding-window archs bound their attention cache by the window
+        if cfg.attn_window is not None:
+            for path, leaf in jax.tree_util.tree_flatten_with_path(cache)[0]:
+                names = [str(getattr(p, "key", "")) for p in path]
+                if "k" in names or "c_kv" in names:
+                    # length dim is after the stack+batch dims
+                    assert cfg.attn_window in leaf.shape or \
+                        min(shape.seq_len, cfg.attn_window) in leaf.shape
+
+
+def test_materialize_and_zeros():
+    cfg = get_config("gemma-7b").reduced()
+    from repro.configs.base import InputShape
+    sh = InputShape("t", 32, 2, "train")
+    spec = SP.train_specs(cfg, sh)
+    batch = SP.materialize(jax.random.PRNGKey(0), spec)
+    assert batch["tokens"].dtype == jnp.int32
+    zeros = SP.zeros_like_spec(spec)
+    assert float(jnp.sum(jnp.abs(zeros["tokens"]))) == 0
+
+
+def test_long500k_window_variants():
+    """Dense archs get the sliding-window variant at 500k; SSM/hybrid don't
+    need it (DESIGN.md §4)."""
+    shape = INPUT_SHAPES["long_500k"]
+    assert config_for("llama3-405b", shape).attn_window == 4096
+    assert config_for("gemma-7b", shape).attn_window == 4096
+    assert config_for("mamba2-370m", shape).attn_window is None
+    assert config_for("zamba2-1.2b", shape).attn_window == 4096  # shared attn
+    # and the variant is NOT applied at other shapes
+    assert config_for("llama3-405b", INPUT_SHAPES["train_4k"]).attn_window is None

@@ -1,0 +1,82 @@
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import optim
+
+
+def _quadratic_min(tx, steps=200):
+    params = {"w": jnp.array([3.0, -2.0]), "b": jnp.array(1.5)}
+    state = tx.init(params)
+
+    def loss_fn(p):
+        return jnp.sum(p["w"] ** 2) + p["b"] ** 2
+
+    for _ in range(steps):
+        grads = jax.grad(loss_fn)(params)
+        updates, state = tx.update(grads, state, params)
+        params = optim.apply_updates(params, updates)
+    return loss_fn(params)
+
+
+def test_sgd_converges_quadratic():
+    assert _quadratic_min(optim.sgd(0.1)) < 1e-6
+
+
+def test_sgd_momentum_converges():
+    assert _quadratic_min(optim.sgd(0.05, momentum=0.9)) < 1e-6
+
+
+def test_adam_converges():
+    assert _quadratic_min(optim.adam(0.1)) < 1e-4
+
+
+def test_adamw_decays_weights():
+    tx = optim.adamw(0.01, weight_decay=0.5)
+    params = {"w": jnp.ones(3)}
+    state = tx.init(params)
+    zero_grads = {"w": jnp.zeros(3)}
+    updates, _ = tx.update(zero_grads, state, params)
+    assert float(updates["w"][0]) < 0.0  # decay pulls toward zero
+
+
+def test_clip_by_global_norm():
+    tx = optim.clip_by_global_norm(1.0)
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, _ = tx.update(g, tx.init(g), None)
+    norm = jnp.sqrt(jnp.sum(clipped["a"] ** 2))
+    assert float(norm) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_chain_order():
+    tx = optim.chain(optim.clip_by_global_norm(1.0), optim.scale(-0.5))
+    g = {"a": jnp.array([3.0, 4.0])}  # norm 5 → clip to 1 → scale -0.5
+    out, _ = tx.update(g, tx.init(g), None)
+    assert jnp.allclose(out["a"], jnp.array([-0.3, -0.4]), atol=1e-6)
+
+
+def test_schedules():
+    from repro.optim import cosine_decay, linear_warmup_cosine
+
+    s = cosine_decay(1.0, 100)
+    assert float(s(jnp.array(0))) == pytest.approx(1.0)
+    assert float(s(jnp.array(100))) == pytest.approx(0.0, abs=1e-6)
+    w = linear_warmup_cosine(1.0, 10, 100)
+    assert float(w(jnp.array(5))) == pytest.approx(0.5, rel=1e-5)
+    assert float(w(jnp.array(100))) == pytest.approx(0.0, abs=1e-6)
+
+
+def test_jittable_step():
+    tx = optim.chain(optim.clip_by_global_norm(1.0), optim.adam(1e-2))
+    params = {"w": jnp.ones((4, 4))}
+    state = tx.init(params)
+
+    @jax.jit
+    def step(p, s):
+        g = jax.grad(lambda pp: jnp.sum(pp["w"] ** 2))(p)
+        u, s = tx.update(g, s, p)
+        return optim.apply_updates(p, u), s
+
+    p2, s2 = step(params, state)
+    assert p2["w"].shape == (4, 4)
+    assert float(jnp.sum(p2["w"])) < 16.0
