@@ -1,8 +1,14 @@
-"""Kernel microbenchmarks: interpret-mode correctness + host-timed oracle
-comparison across the hot-spot shapes. On-TPU timing needs real hardware;
-here ``us_per_call`` is the pure-jnp oracle (the XLA-fused baseline the
-Pallas kernel must beat on TPU), and ``derived`` records kernel/oracle
-max-abs error."""
+"""Kernel + engine microbenchmarks.
+
+Kernels: interpret-mode correctness + host-timed oracle comparison across
+the hot-spot shapes. On-TPU timing needs real hardware; here ``us_per_call``
+is the pure-jnp oracle (the XLA-fused baseline the Pallas kernel must beat
+on TPU), and ``derived`` records kernel/oracle max-abs error.
+
+Engine: end-to-end wall time of one multi-client local-SSL session on the
+vmap-over-clients jitted fast path vs the per-client Python loop (both
+including trace/compile, i.e. what a protocol run actually pays) — the
+jitted path must win."""
 from __future__ import annotations
 
 import time
@@ -20,8 +26,47 @@ def _time(fn, *args, iters=3):
     return (time.time() - t0) / iters * 1e6
 
 
+def bench_engine() -> None:
+    """One homogeneous 4-party SSL session: vmap fast path vs Python loop."""
+    from repro import engine
+    from repro.core.ssl import SSLConfig
+    from repro.models.extractors import make_classifier, make_mlp_extractor
+
+    parties, n_l, n_u, feat = 4, 256, 1024, 32
+    ext = make_mlp_extractor(rep_dim=16, hidden=(64,))
+    head = make_classifier(2)
+    ssl_cfg = SSLConfig(modality="tabular")
+    key = jax.random.PRNGKey(0)
+    tasks = []
+    for k in range(parties):
+        kp, kl, ku, ky = jax.random.split(jax.random.fold_in(key, k), 4)
+        x_l = jax.random.normal(kl, (n_l, feat))
+        x_u = jax.random.normal(ku, (n_u, feat))
+        y = jax.random.randint(ky, (n_l,), 0, 2)
+        params = engine.PartyParams(ext.init(kp, x_l[:2]),
+                                    head.init(kp, jnp.zeros((1, 16))))
+        tasks.append(engine.PartyTask(ext, head, params, ssl_cfg, x_l, y, x_u,
+                                      feature_mean=jnp.mean(x_u, axis=0)))
+    hp = engine.SSLHParams(epochs=3, batch_size=32)
+
+    def run(mode):
+        t0 = time.time()
+        params, _, vmapped = engine.train_clients_ssl(
+            jax.random.PRNGKey(1), tasks, hp, mode=mode)
+        jax.block_until_ready(jax.tree_util.tree_leaves(params))
+        return (time.time() - t0) * 1e6, vmapped
+
+    us_python, _ = run("python")
+    us_vmap, vmapped = run("vmap")
+    assert vmapped
+    print(f"engine/ssl_python_loop/K{parties}e{hp.epochs},{us_python:.0f},")
+    print(f"engine/ssl_vmap_jit/K{parties}e{hp.epochs},{us_vmap:.0f},"
+          f"speedup={us_python / us_vmap:.2f}x")
+
+
 def main() -> None:
     print("name,us_per_call,derived")
+    bench_engine()
 
     # kmeans assignment: the paper's step-③ shape (N_o grads × C classes)
     from repro.kernels.kmeans import ops as km_ops, ref as km_ref

@@ -19,7 +19,7 @@ def main() -> None:
     mk = lambda: [make_mlp_extractor(rep_dim=32, hidden=(64,)) for _ in range(2)]
     ssl = [SSLConfig(modality="tabular")] * 2
     cfg = ProtocolConfig(client_epochs=5, server_epochs=15,
-                         fewshot_threshold=0.85, use_sdpa_kernel=False)
+                         fewshot_threshold=0.85, use_kernels=False)
 
     one = run_one_shot(jax.random.PRNGKey(1), split, mk(), ssl, cfg)
     few = run_few_shot(jax.random.PRNGKey(1), split, mk(), ssl, cfg)

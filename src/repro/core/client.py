@@ -8,22 +8,19 @@ server-gated pseudo-labeled unaligned samples (few-shot, Alg. 2 l.11-19).
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from functools import partial
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro import optim
-from repro.core.ssl import SSLConfig, ssl_loss
-from repro.data.loader import epoch_batches
+from repro.core.ssl import SSLConfig
+from repro.engine.local_ssl import (PartyParams, PartyTask, SSLHParams,
+                                    train_party_ssl)
 from repro.models.extractors import Model, make_classifier
 
-
-class ClientParams(NamedTuple):
-    extractor: Any
-    head: Any
+# The (extractor, head) parameter pair is defined by the engine layer so the
+# protocol path and the multi-pod schedule train the same structure.
+ClientParams = PartyParams
 
 
 @dataclass
@@ -64,24 +61,15 @@ def make_client(key: jax.Array, index: int, extractor: Model, num_classes: int,
 
 
 # ----------------------------------------------------------------- SSL loop
-def _make_ssl_step(client: VFLClient, tx: optim.GradientTransformation):
-    cfg = client.ssl_cfg
-    fm = client.feature_mean
-
-    def logits_fn(params: ClientParams, x):
-        return client.head.apply(params.head, client.extractor.apply(params.extractor, x))
-
-    @jax.jit
-    def step(params, opt_state, key, xb_l, yb_l, xb_u):
-        def loss_fn(p):
-            return ssl_loss(logits_fn, p, key, xb_l, yb_l, xb_u, cfg, fm)
-
-        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
-        updates, opt_state = tx.update(grads, opt_state, params)
-        params = optim.apply_updates(params, updates)
-        return params, opt_state, metrics
-
-    return step
+def ssl_task_for(client: VFLClient, x_labeled: jnp.ndarray,
+                 y_pseudo: jnp.ndarray, x_unlabeled: jnp.ndarray) -> PartyTask:
+    """Package this client's local-SSL problem for the engine layer."""
+    return PartyTask(extractor=client.extractor, head=client.head,
+                     params=PartyParams(*client.params),
+                     ssl_cfg=client.ssl_cfg,
+                     x_labeled=x_labeled, y_pseudo=y_pseudo,
+                     x_unlabeled=x_unlabeled,
+                     feature_mean=client.feature_mean)
 
 
 def local_ssl_train(
@@ -98,25 +86,12 @@ def local_ssl_train(
 ) -> Tuple[VFLClient, dict]:
     """Alg. 1 lines 29-34: epochs of minibatch SSL. Labeled and unlabeled
     minibatches are drawn independently (FixMatch uses μ=unlabeled_ratio×
-    larger unlabeled batches)."""
-    tx = optim.chain(optim.clip_by_global_norm(5.0),
-                     optim.sgd(learning_rate, momentum=momentum))
-    opt_state = tx.init(client.params)
-    step = _make_ssl_step(client, tx)
-    params = client.params
-
-    n_l, n_u = x_labeled.shape[0], x_unlabeled.shape[0]
-    bs_l = min(batch_size, n_l)
-    bs_u = min(batch_size * unlabeled_ratio, n_u)
-    last_metrics: dict = {}
-    seed0 = int(jax.random.randint(key, (), 0, 2**31 - 1))
-    for e in range(epochs):
-        u_rng = np.random.RandomState(seed0 + 7919 * e)
-        for bi, idx_l in enumerate(epoch_batches(n_l, bs_l, seed0 + e)):
-            idx_u = u_rng.randint(0, n_u, size=bs_u)
-            key, k = jax.random.split(key)
-            params, opt_state, m = step(params, opt_state, k,
-                                        x_labeled[idx_l], y_pseudo[idx_l],
-                                        x_unlabeled[idx_u])
-            last_metrics = {k_: float(v) for k_, v in m.items()}
-    return replace(client, params=ClientParams(*params)), last_metrics
+    larger unlabeled batches). Thin wrapper over the engine's single-party
+    path; ``repro.core.protocol`` batches all parties through the engine's
+    vmap fast path instead of calling this per client."""
+    hp = SSLHParams(epochs=epochs, batch_size=batch_size,
+                    learning_rate=learning_rate, momentum=momentum,
+                    unlabeled_ratio=unlabeled_ratio)
+    params, metrics = train_party_ssl(
+        key, ssl_task_for(client, x_labeled, y_pseudo, x_unlabeled), hp)
+    return replace(client, params=ClientParams(*params)), metrics

@@ -100,9 +100,19 @@ def kmeans(key, x: jnp.ndarray, num_clusters: int, num_iters: int = 25,
 
 
 def gradient_pseudo_labels(key, partial_grads: jnp.ndarray, num_classes: int,
-                           num_iters: int = 25, use_kernel: bool = False) -> jnp.ndarray:
-    """Ŷ_o^k ← k-means(∇_{H_o^k} Loss, C)   (Alg. 1, line 28)."""
-    labels, _ = kmeans(key, partial_grads, num_classes, num_iters, use_kernel)
+                           num_iters: int = 25, use_kernel: bool = False,
+                           restarts: int = 4) -> jnp.ndarray:
+    """Ŷ_o^k ← k-means(∇_{H_o^k} Loss, C)   (Alg. 1, line 28).
+
+    Fully jittable, so it also runs *inside* the engine's shard_map one-shot
+    session (``repro.launch.vfl_step``) where it stays party-local — zero
+    pod-axis collectives. ``restarts=1`` keeps that compiled path lean; the
+    host-scale protocol keeps the default multi-restart robustness.
+    Callers outside the engine should prefer ``repro.engine.pseudo_labels``,
+    which carries the engine-wide ``use_kernels`` switch.
+    """
+    labels, _ = kmeans(key, partial_grads, num_classes, num_iters, use_kernel,
+                       restarts=restarts)
     return labels
 
 

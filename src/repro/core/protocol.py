@@ -1,20 +1,26 @@
 """One-shot and few-shot VFL protocol orchestration (Alg. 1 + Alg. 2).
 
-Pure-python orchestration over jitted phases; every client↔server transfer
-goes through the CommLedger so Tab. 1's communication columns are produced by
-the training code path itself.
+``run_one_shot`` / ``run_few_shot`` are THIN orchestrators: they do the
+ledger-tracked client↔server exchanges (every transfer goes through the
+CommLedger so Tab. 1's communication columns are produced by the training
+code path itself) and delegate all client-side computation to the VFL
+engine layer (``repro.engine``): gradient-clustering pseudo-labels, SDPA
+estimation, and the local-SSL sessions — vmapped into one jitted program
+when the party zoo is homogeneous, per-client Python loop otherwise
+(DESIGN.md §2).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Sequence
+from dataclasses import dataclass, field, replace
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import engine
 from repro.core import clustering, estimator
-from repro.core.client import VFLClient, local_ssl_train, make_client
+from repro.core.client import VFLClient, make_client, ssl_task_for
 from repro.core.comm import CommLedger
 from repro.core.metrics import accuracy, binary_auc
 from repro.core.server import VFLServer, concat_reps
@@ -35,9 +41,15 @@ class ProtocolConfig:
                                      # style defense — paper §6 compatibility)
     kmeans_iters: int = 25
     unlabeled_ratio: int = 2
-    use_kmeans_kernel: bool = False
-    use_sdpa_kernel: bool = False
+    use_kernels: bool = False        # one switch: Pallas k-means + SDPA kernels
+    engine_mode: str = "auto"        # "auto" | "vmap" | "python" (DESIGN.md §2)
     rep_dtype: jnp.dtype = jnp.float32
+
+    def ssl_hparams(self) -> engine.SSLHParams:
+        return engine.SSLHParams(epochs=self.client_epochs,
+                                 batch_size=self.batch_size,
+                                 learning_rate=self.client_lr,
+                                 unlabeled_ratio=self.unlabeled_ratio)
 
 
 @dataclass
@@ -73,6 +85,17 @@ def _evaluate(server: VFLServer, clients: Sequence[VFLClient],
         scores = jax.nn.softmax(logits, axis=-1)[:, 1]
         return "auc", binary_auc(scores, split.test_labels)
     return "accuracy", accuracy(logits, split.test_labels)
+
+
+def _train_clients(key, clients: Sequence[VFLClient], tasks, cfg: ProtocolConfig,
+                   diagnostics: dict, mode: Optional[str] = None) -> List[VFLClient]:
+    """Run every party's local SSL through the engine; record which path ran."""
+    params, metrics, vmapped = engine.train_clients_ssl(
+        key, tasks, cfg.ssl_hparams(),
+        mode=cfg.engine_mode if mode is None else mode)
+    diagnostics["engine_path"] = "vmap" if vmapped else "python"
+    diagnostics.setdefault("ssl_metrics", []).extend(metrics)
+    return [replace(c, params=p) for c, p in zip(clients, params)]
 
 
 # ------------------------------------------------------------- one-shot VFL
@@ -115,22 +138,18 @@ def run_one_shot(
     for c, g in zip(clients, grads):
         ledger.log(c.index, "down", "partial_grads", g, round=r2)
 
-    # ③ gradient clustering → pseudo labels;  ④ local SSL
+    # ③ gradient clustering → pseudo labels;  ④ local SSL — both engine-side
     diagnostics = {"kmeans_purity": [], "ssl_metrics": []}
-    new_clients = []
+    key, kk, ks = jax.random.split(key, 3)
+    tasks = []
     for c, g, x_o, x_u in zip(clients, grads, split.aligned, split.unaligned):
-        key, kk, ks = jax.random.split(key, 3)
-        pseudo = clustering.gradient_pseudo_labels(
-            kk, g, split.num_classes, cfg.kmeans_iters, cfg.use_kmeans_kernel)
+        pseudo = engine.pseudo_labels(
+            jax.random.fold_in(kk, c.index), g, split.num_classes,
+            cfg.kmeans_iters, use_kernels=cfg.use_kernels)
         diagnostics["kmeans_purity"].append(
             clustering.cluster_purity(pseudo, split.labels, split.num_classes))
-        c, m = local_ssl_train(ks, c, x_o, pseudo, x_u,
-                               epochs=cfg.client_epochs, batch_size=cfg.batch_size,
-                               learning_rate=cfg.client_lr,
-                               unlabeled_ratio=cfg.unlabeled_ratio)
-        diagnostics["ssl_metrics"].append(m)
-        new_clients.append(c)
-    clients = new_clients
+        tasks.append(ssl_task_for(c, x_o, pseudo, x_u))
+    clients = _train_clients(ks, clients, tasks, cfg, diagnostics)
 
     # ⑤ upload refreshed reps;  ⑥ server trains classifier
     reps = []
@@ -210,8 +229,8 @@ def run_few_shot(
     diagnostics["fewshot_gate_rate"] = []
     r4 = ledger.next_round()
     for k_idx, (c, h_u) in enumerate(zip(clients, h_u_all)):
-        est = estimator.estimate_missing_parties(h_u, h_o_all, k_idx,
-                                                 use_kernel=cfg.use_sdpa_kernel)
+        est = engine.estimate_missing(h_u, h_o_all, k_idx,
+                                      use_kernels=cfg.use_kernels)
         parts = []
         ei = 0
         for j in range(len(clients)):
@@ -228,11 +247,18 @@ def run_few_shot(
         probs_all.append(probs)
         diagnostics["fewshot_gate_rate"].append(float(jnp.mean(probs > 0)))
 
-    # ⑤' clients expand the labeled set and re-run SSL (Alg. 2 l.11-19)
-    new_clients = []
+    # ⑤' clients expand the labeled set and re-run SSL (Alg. 2 l.11-19).
+    # The per-party labeled-set sizes now generally differ (each client
+    # keeps a different number of gated samples), so this phase runs under
+    # "auto" even when the caller forced "vmap": the fast path still
+    # engages when the gates happen to agree, and the Python fallback
+    # handles the ragged case instead of rejecting it.
+    phase_mode = "auto" if cfg.engine_mode == "vmap" else cfg.engine_mode
+    tasks = []
+    key, ks = jax.random.split(key)
     for c, probs, x_o, x_u, h_u in zip(clients, probs_all, split.aligned,
                                        split.unaligned, h_u_all):
-        key, kb, kk, ks = jax.random.split(key, 4)
+        key, kb = jax.random.split(key)
         take = jax.random.bernoulli(kb, jnp.clip(probs, 0.0, 1.0))
         idx = np.where(np.asarray(take))[0]
         # pseudo labels for the selected unaligned samples = local model preds
@@ -248,12 +274,9 @@ def run_few_shot(
         y_lab = jnp.concatenate([y_o, y_uc], axis=0) if len(idx) > 0 else y_o
         keep = np.setdiff1d(np.arange(x_u.shape[0]), idx)
         x_unl = x_u[keep] if len(keep) > 0 else x_u[:1]
-        c, m = local_ssl_train(ks, c, x_lab, y_lab, x_unl,
-                               epochs=cfg.client_epochs, batch_size=cfg.batch_size,
-                               learning_rate=cfg.client_lr,
-                               unlabeled_ratio=cfg.unlabeled_ratio)
-        new_clients.append(c)
-    clients = new_clients
+        tasks.append(ssl_task_for(c, x_lab, y_lab, x_unl))
+    clients = _train_clients(ks, clients, tasks, cfg, diagnostics,
+                             mode=phase_mode)
 
     # ⑥' final upload + classifier re-fit
     reps = []

@@ -11,6 +11,11 @@ Modality dispatch picks the paper's augmentations: image (flip/translate/
 cutout/jitter) or tabular (Eq. 5-6 feature masking + noise). "feature"
 modality = tabular augs applied to any flat feature vector (used when the
 extractor is an LM/SSM backbone over embeddings — DESIGN.md §4).
+
+``ssl_loss`` is consumed exclusively through the engine layer's
+``repro.engine.make_ssl_step_fn`` (DESIGN.md §2), which wraps one minibatch
+of this objective plus the optimizer update into the step function shared
+by the host-scale protocol and the multi-pod shard_map schedule.
 """
 from __future__ import annotations
 

@@ -1,0 +1,42 @@
+"""VFL engine layer — the shared jit-compiled multi-client training path.
+
+``repro.core.protocol`` (host-scale orchestration) and
+``repro.launch.vfl_step`` (multi-pod shard_map schedule) both build their
+local-SSL training from the step functions defined here, so the paper's
+"all client computation happens between the exchanges" claim is one
+implementation, not two. See DESIGN.md §2.
+
+Kernel dispatch for the protocol's two Pallas hot-spots (k-means assignment,
+SDPA estimation) is funneled through :func:`pseudo_labels` and
+:func:`estimate_missing` behind a single ``use_kernels`` switch.
+"""
+from repro.engine.local_ssl import (
+    PartyParams,
+    PartyTask,
+    Schedule,
+    SSLHParams,
+    build_schedule,
+    make_ssl_optimizer,
+    make_ssl_step_fn,
+    tasks_are_homogeneous,
+    train_clients_ssl,
+    train_parties_ssl_vmapped,
+    train_party_ssl,
+)
+from repro.engine.dispatch import estimate_missing, pseudo_labels
+
+__all__ = [
+    "PartyParams",
+    "PartyTask",
+    "Schedule",
+    "SSLHParams",
+    "build_schedule",
+    "estimate_missing",
+    "make_ssl_optimizer",
+    "make_ssl_step_fn",
+    "pseudo_labels",
+    "tasks_are_homogeneous",
+    "train_clients_ssl",
+    "train_parties_ssl_vmapped",
+    "train_party_ssl",
+]

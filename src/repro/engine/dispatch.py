@@ -1,0 +1,38 @@
+"""One ``use_kernels`` switch for the protocol's Pallas hot-spots.
+
+The protocol used to carry two ad-hoc flags (``use_kmeans_kernel``,
+``use_sdpa_kernel``); every kernel-served phase now routes through this
+module so enabling the Pallas path is one decision (DESIGN.md §5). The
+pure-jnp references remain the numerical oracles either way.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import clustering, estimator
+
+
+def pseudo_labels(key: jax.Array, partial_grads: jnp.ndarray, num_classes: int,
+                  kmeans_iters: int = 25, use_kernels: bool = False,
+                  restarts: int = 4) -> jnp.ndarray:
+    """Step ③: k-means over partial gradients → Ŷ_o^k (Alg. 1 l.28).
+
+    ``use_kernels=True`` serves the final full-size cluster assignment with
+    the Pallas ``kmeans`` kernel.
+    """
+    return clustering.gradient_pseudo_labels(
+        key, partial_grads, num_classes, kmeans_iters,
+        use_kernel=use_kernels, restarts=restarts)
+
+
+def estimate_missing(h_u_k: jnp.ndarray, h_o_all: Sequence[jnp.ndarray],
+                     k: int, use_kernels: bool = False) -> List[jnp.ndarray]:
+    """Few-shot step ③': Eq. 10 SDPA estimation of the other parties'
+    representations. ``use_kernels=True`` serves it with the Pallas
+    flash-style blocked SDPA kernel.
+    """
+    return estimator.estimate_missing_parties(
+        h_u_k, h_o_all, k, use_kernel=use_kernels)

@@ -1,0 +1,311 @@
+"""The one-shot VFL engine: ONE local-SSL training implementation.
+
+This module is the single place the repo implements "client trains its
+extractor+head by semi-supervised learning on pseudo-labels" (Alg. 1
+l.28-34 / Alg. 2 l.11-19).  It is shared by
+
+  * ``repro.core.protocol`` / ``repro.core.client`` — the host-scale
+    protocol orchestrators (``local_ssl_train`` delegates here);
+  * ``repro.launch.vfl_step`` — the multi-pod shard_map schedule, which
+    closes the same ``make_ssl_step_fn`` step inside its ``lax.fori_loop``
+    so the collective-count story is measured against the real step math.
+
+Two execution paths, one set of step functions (DESIGN.md §2):
+
+  fast path      ``train_clients_ssl(..., mode="vmap")`` — all parties'
+                 params/data are stacked on a leading client axis and the
+                 whole session runs as ONE jitted program:
+                 ``vmap`` over clients × ``lax.scan`` over the step
+                 schedule, with the stacked parameter buffers donated.
+  fallback path  ``mode="python"`` — a per-client Python loop over the
+                 same jitted step, for heterogeneous zoos (per-party
+                 feature dims, extractor architectures or pool sizes
+                 that cannot share one stacked shape).
+
+Both paths draw their minibatch schedule and per-step PRNG keys from
+``build_schedule`` with identical per-party keys, so they are numerically
+equivalent up to batched-matmul reassociation (tests/test_engine.py pins
+this at atol 1e-5).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, Any, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.data.loader import epoch_batches
+from repro.models.extractors import Model
+
+if TYPE_CHECKING:   # the engine is imported by repro.core.client — keep the
+    from repro.core.ssl import SSLConfig   # runtime import edge one-way
+
+
+class PartyParams(NamedTuple):
+    """(extractor, head) parameter pytrees of one party's local model."""
+    extractor: Any
+    head: Any
+
+
+@dataclass(frozen=True)
+class SSLHParams:
+    """Hyper-parameters of the local-SSL loop (paper defaults)."""
+    epochs: int = 20
+    batch_size: int = 32
+    learning_rate: float = 0.01
+    momentum: float = 0.9
+    unlabeled_ratio: int = 2      # μ: unlabeled batch = μ × labeled batch
+    grad_clip: float = 5.0
+
+
+@dataclass(frozen=True)
+class PartyTask:
+    """One party's local-SSL problem: model, pseudo-labeled + private data."""
+    extractor: Model
+    head: Model
+    params: PartyParams
+    ssl_cfg: SSLConfig
+    x_labeled: jnp.ndarray        # (N_l, …)  overlap (+ gated unaligned) rows
+    y_pseudo: jnp.ndarray         # (N_l,)    cluster / server pseudo-labels
+    x_unlabeled: jnp.ndarray      # (N_u, …)  party-private pool
+    feature_mean: Optional[jnp.ndarray] = None   # x̄ for FixMatch-tab
+
+
+class Schedule(NamedTuple):
+    """Precomputed minibatch/PRNG schedule for one party's SSL session."""
+    idx_labeled: jnp.ndarray      # (S, bs_l) int32
+    idx_unlabeled: jnp.ndarray    # (S, bs_u) int32
+    step_keys: jnp.ndarray        # (S, 2)    per-step PRNG keys
+
+
+def make_ssl_optimizer(hp: SSLHParams) -> optim.GradientTransformation:
+    return optim.chain(optim.clip_by_global_norm(hp.grad_clip),
+                       optim.sgd(hp.learning_rate, momentum=hp.momentum))
+
+
+def make_ssl_step_fn(extractor: Model, head: Model, ssl_cfg: "SSLConfig",
+                     tx: optim.GradientTransformation):
+    """THE local-SSL step. Pure function of its arguments — jit it, scan it,
+    vmap it, or close it inside a shard_map program; every caller in the
+    repo gets its step from here.
+
+    Returns ``step(params, opt_state, feature_mean, key, xb_l, yb_l, xb_u)
+    -> (params, opt_state, metrics)`` where ``feature_mean`` may be None
+    for modalities that don't use it (image/token).
+    """
+
+    from repro.core.ssl import ssl_loss   # deferred: core.client imports us
+
+    def logits_fn(params: PartyParams, x):
+        return head.apply(params.head, extractor.apply(params.extractor, x))
+
+    def step(params, opt_state, feature_mean, key, xb_l, yb_l, xb_u):
+        def loss_fn(p):
+            return ssl_loss(logits_fn, p, key, xb_l, yb_l, xb_u, ssl_cfg,
+                            feature_mean)
+
+        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        updates, opt_state = tx.update(grads, opt_state, params)
+        params = optim.apply_updates(params, updates)
+        return params, opt_state, metrics
+
+    return step
+
+
+# ------------------------------------------------------------------ schedule
+def build_schedule(key: jax.Array, n_labeled: int, n_unlabeled: int,
+                   hp: SSLHParams) -> Schedule:
+    """Flatten the epoch×minibatch loop into one (S, …) step schedule.
+
+    Labeled batches are shuffled epochs (drop-remainder); unlabeled batches
+    are independent uniform draws (FixMatch's μ× larger batches). Keys and
+    indices are materialized up front so the scan path and the Python path
+    consume bit-identical randomness.
+    """
+    bs_l = min(hp.batch_size, n_labeled)
+    bs_u = min(hp.batch_size * hp.unlabeled_ratio, n_unlabeled)
+    seed0 = int(jax.random.randint(key, (), 0, 2**31 - 1))
+    idx_l: List[np.ndarray] = []
+    idx_u: List[np.ndarray] = []
+    for e in range(hp.epochs):
+        u_rng = np.random.RandomState(seed0 + 7919 * e)
+        for batch in epoch_batches(n_labeled, bs_l, seed0 + e):
+            idx_l.append(batch)
+            idx_u.append(u_rng.randint(0, n_unlabeled, size=bs_u))
+    if not idx_l:                        # epochs == 0: an empty session
+        return Schedule(
+            idx_labeled=jnp.zeros((0, bs_l), jnp.int32),
+            idx_unlabeled=jnp.zeros((0, bs_u), jnp.int32),
+            step_keys=jnp.zeros((0, 2), jnp.uint32),
+        )
+    return Schedule(
+        idx_labeled=jnp.asarray(np.stack(idx_l), jnp.int32),
+        idx_unlabeled=jnp.asarray(np.stack(idx_u), jnp.int32),
+        step_keys=jax.random.split(jax.random.fold_in(key, 1), len(idx_l)),
+    )
+
+
+# ------------------------------------------------------- fallback: Python loop
+def train_party_ssl(key: jax.Array, task: PartyTask, hp: SSLHParams
+                    ) -> Tuple[PartyParams, dict]:
+    """One party's SSL session as a Python loop over the jitted step."""
+    tx = make_ssl_optimizer(hp)
+    step = jax.jit(make_ssl_step_fn(task.extractor, task.head, task.ssl_cfg, tx))
+    sched = build_schedule(key, task.x_labeled.shape[0],
+                           task.x_unlabeled.shape[0], hp)
+    params, opt_state = task.params, tx.init(task.params)
+    idx_l = np.asarray(sched.idx_labeled)
+    idx_u = np.asarray(sched.idx_unlabeled)
+    metrics: dict = {}
+    for i in range(idx_l.shape[0]):
+        params, opt_state, m = step(
+            params, opt_state, task.feature_mean, sched.step_keys[i],
+            task.x_labeled[idx_l[i]], task.y_pseudo[idx_l[i]],
+            task.x_unlabeled[idx_u[i]])
+        metrics = m
+    return params, {k: float(v) for k, v in metrics.items()}
+
+
+# ------------------------------------------------- fast path: vmap over clients
+def _stack(trees):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _unstack(tree, k: int):
+    return [jax.tree_util.tree_map(lambda a: a[i], tree) for i in range(k)]
+
+
+def _apply_fns_match(a: Model, b: Model) -> bool:
+    """True when two Models provably share forward semantics: the same
+    function object, or the same factory code with equal captured closure
+    values. The vmap fast path trains every party with party 0's apply fn,
+    so shape equality alone is not enough — two architectures can share
+    param shapes yet compute different functions."""
+    fa, fb = a.apply, b.apply
+    if fa is fb:
+        return True
+    if getattr(fa, "__code__", None) is not getattr(fb, "__code__", False):
+        return False
+    cells_a = [c.cell_contents for c in (fa.__closure__ or ())]
+    cells_b = [c.cell_contents for c in (fb.__closure__ or ())]
+    try:
+        return bool(cells_a == cells_b)
+    except Exception:
+        return False
+
+
+def tasks_are_homogeneous(tasks: Sequence[PartyTask]) -> bool:
+    """True when every party's params/data/config share one stacked shape
+    AND the extractor/head forward functions match — the precondition of
+    the vmap fast path. Heterogeneous zoos (per-party feature dims,
+    architectures, or labeled-set sizes) take the Python fallback."""
+    t0 = tasks[0]
+    ref = jax.tree_util.tree_structure(t0.params)
+    ref_shapes = [(l.shape, l.dtype) for l in jax.tree_util.tree_leaves(t0.params)]
+    for t in tasks[1:]:
+        if not (_apply_fns_match(t.extractor, t0.extractor)
+                and _apply_fns_match(t.head, t0.head)):
+            return False
+        if jax.tree_util.tree_structure(t.params) != ref:
+            return False
+        if [(l.shape, l.dtype) for l in jax.tree_util.tree_leaves(t.params)] != ref_shapes:
+            return False
+        if (t.x_labeled.shape != t0.x_labeled.shape
+                or t.x_unlabeled.shape != t0.x_unlabeled.shape
+                or t.y_pseudo.shape != t0.y_pseudo.shape):
+            return False
+        if t.ssl_cfg != t0.ssl_cfg:
+            return False
+        if (t.feature_mean is None) != (t0.feature_mean is None):
+            return False
+        if (t.feature_mean is not None
+                and t.feature_mean.shape != t0.feature_mean.shape):
+            return False
+    return True
+
+
+def train_parties_ssl_vmapped(keys: Sequence[jax.Array],
+                              tasks: Sequence[PartyTask], hp: SSLHParams
+                              ) -> Tuple[List[PartyParams], List[dict]]:
+    """All parties' SSL sessions as ONE jitted program: ``vmap`` over the
+    stacked client axis, ``lax.scan`` over the flattened epoch×batch
+    schedule, stacked parameter buffers donated to the compiled call."""
+    t0 = tasks[0]
+    k = len(tasks)
+    tx = make_ssl_optimizer(hp)
+    step = make_ssl_step_fn(t0.extractor, t0.head, t0.ssl_cfg, tx)
+
+    scheds = [build_schedule(kk, t.x_labeled.shape[0], t.x_unlabeled.shape[0], hp)
+              for kk, t in zip(keys, tasks)]
+    if scheds[0].step_keys.shape[0] == 0:          # epochs == 0: no-op session
+        return [t.params for t in tasks], [{} for _ in tasks]
+    stacked_params = _stack([t.params for t in tasks])
+    x_l = jnp.stack([t.x_labeled for t in tasks])
+    y_l = jnp.stack([t.y_pseudo for t in tasks])
+    x_u = jnp.stack([t.x_unlabeled for t in tasks])
+    idx_l = jnp.stack([s.idx_labeled for s in scheds])
+    idx_u = jnp.stack([s.idx_unlabeled for s in scheds])
+    step_keys = jnp.stack([s.step_keys for s in scheds])
+    fm = (None if t0.feature_mean is None
+          else jnp.stack([t.feature_mean for t in tasks]))
+
+    def one_party(params, feature_mean, x_lab, y_lab, x_unl, i_l, i_u, keys_s):
+        opt_state = tx.init(params)
+
+        def body(carry, inp):
+            p, o = carry
+            il, iu, kk = inp
+            p, o, m = step(p, o, feature_mean, kk,
+                           x_lab[il], y_lab[il], x_unl[iu])
+            return (p, o), m
+
+        (params, _), ms = jax.lax.scan(body, (params, opt_state),
+                                       (i_l, i_u, keys_s))
+        last = jax.tree_util.tree_map(lambda a: a[-1], ms)
+        return params, last
+
+    fn = jax.jit(
+        jax.vmap(one_party,
+                 in_axes=(0, None if fm is None else 0, 0, 0, 0, 0, 0, 0)),
+        donate_argnums=(0,))
+    new_params, metrics = fn(stacked_params, fm, x_l, y_l, x_u,
+                             idx_l, idx_u, step_keys)
+    params_list = _unstack(new_params, k)
+    metrics_list = [{name: float(v[i]) for name, v in metrics.items()}
+                    for i in range(k)]
+    return params_list, metrics_list
+
+
+# ---------------------------------------------------------------- dispatcher
+def train_clients_ssl(key: jax.Array, tasks: Sequence[PartyTask],
+                      hp: SSLHParams, mode: str = "auto"
+                      ) -> Tuple[List[PartyParams], List[dict], bool]:
+    """Run every party's local-SSL session; returns (params, metrics, vmapped).
+
+    mode: "auto" (vmap when ``tasks_are_homogeneous``), "vmap" (require the
+    fast path; raises on heterogeneous tasks), or "python" (force the
+    per-client fallback loop). Per-party keys are split identically for
+    both paths, so "vmap" and "python" agree numerically to ~1e-5.
+    """
+    if mode not in ("auto", "vmap", "python"):
+        raise ValueError(f"unknown engine mode {mode!r}")
+    keys = list(jax.random.split(key, len(tasks)))
+    homogeneous = tasks_are_homogeneous(tasks)
+    if mode == "vmap" and not homogeneous:
+        raise ValueError("engine mode 'vmap' requires homogeneous party "
+                         "tasks (same param/data shapes and SSLConfig); "
+                         "use mode='auto' or 'python'")
+    # explicit "vmap" always honors the request (even K=1); "auto" only
+    # pays the stacked-program trace when there is >1 party to batch
+    if mode == "vmap" or (mode == "auto" and homogeneous and len(tasks) > 1):
+        params, metrics = train_parties_ssl_vmapped(keys, tasks, hp)
+        return params, metrics, True
+    params_list, metrics_list = [], []
+    for kk, t in zip(keys, tasks):
+        p, m = train_party_ssl(kk, t, hp)
+        params_list.append(p)
+        metrics_list.append(m)
+    return params_list, metrics_list, False

@@ -1,4 +1,27 @@
-"""Public wrapper: GQA grouping, padding, block sizing."""
+"""Public wrapper: GQA grouping, padding, block sizing.
+
+When does this beat the XLA reference?  Single-token decode attention is
+memory-bound on the KV cache: the roofline floor is streaming |KV| bytes
+HBM→VMEM once per step.  The jnp oracle materializes the (G, S) score row
+and its softmax in HBM between two separate matmuls; the kernel's
+online-softmax walk touches the cache exactly once, so it wins at long
+context (S ≳ 8k, and increasingly up to the 32k–500k serving shapes) where
+score-row traffic is comparable to the cache itself.  At short S the whole
+problem fits in cache and XLA's fusion is equally fast.
+
+VMEM budget per grid instance (f32), following the kmeans/kernel.py layout:
+
+  tile              shape         bytes (BS=512, dh=128, G=8)
+  k cache block     (BS, dh)      512·128·4 ≈ 256 KB
+  v cache block     (BS, dh)      512·128·4 ≈ 256 KB
+  q group rows      (G,  dh)      8·128·4   ≈ 4 KB
+  acc scratch       (G,  dh)      8·128·4   ≈ 4 KB
+  score tile        (G,  BS)      8·512·4   ≈ 16 KB
+
+The block_s loop halves BS from 512 until 2·BS·dh + 2·G·dh + G·BS floats
+fit the 12 MB ``_VMEM_BUDGET`` (headroom under ~16 MB/core).  dh is padded
+to 128 lanes, the query group to the 8-sublane minimum.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp

@@ -1,4 +1,25 @@
-"""Public jit'd wrapper: padding, VMEM-budget block sizing, dtype plumbing."""
+"""Public jit'd wrapper: padding, VMEM-budget block sizing, dtype plumbing.
+
+When does this beat the XLA reference?  The jnp oracle materializes the full
+(N, C) distance matrix in HBM before the argmin; the kernel fuses distance
+formation and the argmin reduction in VMEM, so it wins once N·C is large
+enough that the distance matrix spills past cache — in this repo, the
+one-shot step-③ shape (N_o gradient rows × C classes) with N_o ≥ ~2k.
+For tiny N (few hundred rows) the launch overhead makes XLA's fused
+expansion just as fast; that's why ``use_kernels`` defaults to off in
+``ProtocolConfig`` and tests pin the jnp path as the numerical oracle.
+
+VMEM budget per grid instance (f32), mirroring kmeans/kernel.py:
+
+  tile              shape        bytes (BN=256, d=4096, C=1024 worst case)
+  x row-tile        (BN, d)      256·4096·4 ≈ 4.2 MB
+  centers           (C,  d)      1024·4096·4 ≈ 16.8 MB
+  distance tile     (BN, C)      256·1024·4 ≈ 1.0 MB
+
+``_pick_block_n`` clamps BN down until the working set fits the
+``_VMEM_BUDGET`` (12 MB, headroom under the ~16 MB/core of TPU v5e).
+MXU alignment: BN multiple of 8; d and C padded to multiples of 128.
+"""
 from __future__ import annotations
 
 import functools

@@ -1,4 +1,25 @@
-"""Public wrapper: flatten leading dims, pad rows/lanes, dispatch."""
+"""Public wrapper: flatten leading dims, pad rows/lanes, dispatch.
+
+When does this beat the XLA reference?  RMSNorm is memory-bound: the floor
+is one HBM read + one write per element.  Unfused, XLA materializes the f32
+upcast and the variance reduction as separate HBM round-trips; the kernel
+does the square-mean in VREGs over a resident row-tile and writes in the
+input dtype, so it wins on large activations (rows·d ≳ a few MB — every
+per-layer shape of the assigned archs, e.g. 2048×4096) where the extra
+round-trips dominate.  For small shapes XLA usually fuses the chain into
+one pass already and there is nothing left to win.
+
+VMEM budget per grid instance (f32), following the kmeans/kernel.py layout:
+
+  tile              shape        bytes (block=256, d=4096)
+  x row-tile        (BR, d)      256·4096·4 ≈ 4.2 MB
+  out row-tile      (BR, d)      256·4096·4 ≈ 4.2 MB
+  scale             (1,  d)      4096·4     ≈ 16 KB
+
+The block-rows loop halves BR from 256 until 2·BR·d + d floats fit the
+12 MB budget (headroom under ~16 MB/core). d is padded to 128 lanes; the
+mean is computed over the TRUE d, passed statically to the kernel.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp

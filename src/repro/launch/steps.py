@@ -1,4 +1,11 @@
-"""jit-able train / prefill / decode steps for any ArchConfig."""
+"""jit-able train / prefill / decode steps for any ArchConfig.
+
+These factories serve the model-zoo training/serving stack; the VFL
+protocol's analogous step factory is ``repro.engine.make_ssl_step_fn``
+(see the module map in DESIGN.md §6). Both follow the same contract: a
+pure ``step(params, opt_state, batch…) -> (params, opt_state, aux)`` that
+the caller may jit, scan, or close inside a shard_map program.
+"""
 from __future__ import annotations
 
 from typing import Any, Callable, Dict, Optional, Tuple
@@ -11,11 +18,12 @@ from repro.configs.base import ArchConfig
 from repro.models.model_zoo import ModelDef
 
 
-def make_optimizer(cfg: ArchConfig, learning_rate: float = 3e-4):
+def make_optimizer(cfg: ArchConfig, learning_rate: float = 3e-4,
+                   grad_clip: float = 1.0):
     if cfg.optimizer == "sgdm":
-        return optim.chain(optim.clip_by_global_norm(1.0),
+        return optim.chain(optim.clip_by_global_norm(grad_clip),
                            optim.sgd(learning_rate, momentum=0.9))
-    return optim.chain(optim.clip_by_global_norm(1.0),
+    return optim.chain(optim.clip_by_global_norm(grad_clip),
                        optim.adam(learning_rate))
 
 

@@ -15,39 +15,52 @@ may cross the pod axis are the ones the protocol exchanges:
 Both schedules are expressed with shard_map over the "pod" axis so the
 dry-run's HLO makes the collective-count difference inspectable — this is
 the paper's 330× communication claim restated in collectives.
+
+The party-local computation is NOT a toy re-implementation: the extractor is
+``repro.models.make_mlp_extractor``, the pseudo-labels come from the real
+jittable k-means (``repro.core.clustering``), and the SSL iterations inside
+the fori_loop are the engine's ``make_ssl_step_fn`` — the same step function
+``repro.core.protocol`` trains with (DESIGN.md §2). The collective counts
+below are therefore measured against the real local training program.
 """
 from __future__ import annotations
 
 import functools
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core.ssl import cross_entropy
+from repro.core import clustering
+from repro.core.ssl import SSLConfig, cross_entropy
+from repro.engine.local_ssl import (PartyParams, SSLHParams, make_ssl_optimizer,
+                                    make_ssl_step_fn)
+from repro.models.extractors import make_classifier, make_mlp_extractor
 
 
-# --------------------------------------------------------------------------
-# a tiny party-local extractor (MLP) — weights are per-party (leading pod dim)
-# --------------------------------------------------------------------------
+def _make_extractor(feat_dim: int, hidden: int, rep_dim: int):
+    del feat_dim  # the apply fn reads the input dim from the params
+    return make_mlp_extractor(rep_dim=rep_dim, hidden=(hidden,))
+
+
 def extractor_shapes(feat_dim: int, hidden: int, rep_dim: int, parties: int):
+    """ShapeDtypeStructs of the per-party extractor params (leading pod dim),
+    matching ``make_mlp_extractor(rep_dim, hidden=(hidden,))``'s pytree."""
     return {
         "w0": jax.ShapeDtypeStruct((parties, feat_dim, hidden), jnp.float32),
+        "b0": jax.ShapeDtypeStruct((parties, hidden), jnp.float32),
         "w1": jax.ShapeDtypeStruct((parties, hidden, rep_dim), jnp.float32),
+        "b1": jax.ShapeDtypeStruct((parties, rep_dim), jnp.float32),
     }
-
-
-def _extract(wp, x):       # wp: {w0 (f,h), w1 (h,r)}, x (b, f)
-    return jax.nn.relu(x @ wp["w0"]) @ wp["w1"]
 
 
 def make_vanilla_vfl_step(mesh: Mesh, feat_dim: int, hidden: int, rep_dim: int,
                           num_classes: int, lr: float = 0.01) -> Callable:
     """One SplitNN iteration: reps all-gather across pods, joint loss, local
     backprop. Inputs carry a leading party axis sharded over "pod"."""
-    parties = mesh.devices.shape[mesh.axis_names.index("pod")]
+    ext = _make_extractor(feat_dim, hidden, rep_dim)
 
     @functools.partial(
         shard_map, mesh=mesh,
@@ -60,7 +73,7 @@ def make_vanilla_vfl_step(mesh: Mesh, feat_dim: int, hidden: int, rep_dim: int,
         xl = x[0]
 
         def loss_fn(wp):
-            rep = _extract(wp, xl)                          # (b, r)
+            rep = ext.apply(wp, xl)                         # (b, r)
             # ① upload: all-gather representations across parties (pod axis)
             reps = jax.lax.all_gather(rep, "pod")           # (K, b, r)
             joint = jnp.moveaxis(reps, 0, 1).reshape(xl.shape[0], -1)
@@ -79,12 +92,22 @@ def make_vanilla_vfl_step(mesh: Mesh, feat_dim: int, hidden: int, rep_dim: int,
 def make_oneshot_vfl_session(mesh: Mesh, feat_dim: int, hidden: int,
                              rep_dim: int, num_classes: int,
                              local_steps: int, lr: float = 0.01,
-                             rep_dtype=jnp.float32) -> Callable:
+                             rep_dtype=jnp.float32,
+                             kmeans_iters: int = 8,
+                             ssl_cfg: SSLConfig = SSLConfig(modality="tabular"),
+                             ) -> Callable:
     """The WHOLE one-shot session as one program with exactly 3 pod-axis
-    exchanges: reps up → pseudo-label signal down → refreshed reps up.
-    The k-means/SSL machinery is the full repro.core implementation at host
-    scale; here the schedule is the point — local training is a fori_loop
-    with no collectives inside."""
+    exchanges: reps up → partial grads down → refreshed reps up. Everything
+    between the exchanges is party-local: the real jittable k-means over the
+    returned partial gradients (Alg. 1 l.28, restarts=1 to keep the compiled
+    program lean) and ``local_steps`` iterations of the engine's SSL step —
+    full-batch FixMatch-tab on (overlap ∘ pseudo-labels, private pool) — in
+    a lax.fori_loop with zero collectives inside."""
+    ext = _make_extractor(feat_dim, hidden, rep_dim)
+    head = make_classifier(num_classes)
+    tx = make_ssl_optimizer(SSLHParams(epochs=0, learning_rate=lr))
+    ssl_step = make_ssl_step_fn(ext, head, ssl_cfg, tx)
+
     @functools.partial(
         shard_map, mesh=mesh,
         in_specs=(P("pod"), P("pod", "data"), P("pod", "data"),
@@ -94,11 +117,12 @@ def make_oneshot_vfl_session(mesh: Mesh, feat_dim: int, hidden: int,
     def session(params, x_o, x_u, y, w_head):
         wp = jax.tree_util.tree_map(lambda a: a[0], params)
         xo, xu = x_o[0], x_u[0]
+        my = jax.lax.axis_index("pod")
 
         # ①: upload overlap reps (all-gather = pod exchange #1) — §Perf C:
         # the exchange payload travels in rep_dtype (bf16 halves inter-pod
         # bytes; the paper's accounting assumes f32)
-        rep_o = _extract(wp, xo)
+        rep_o = ext.apply(wp, xo)
         # optimization_barrier keeps the cast from being folded away by the
         # excess-precision simplifier — the wire format really is rep_dtype
         rep_q = jax.lax.optimization_barrier(rep_o.astype(rep_dtype))
@@ -113,35 +137,40 @@ def make_oneshot_vfl_session(mesh: Mesh, feat_dim: int, hidden: int,
             return jnp.mean(cross_entropy(j @ w_head, y))
 
         g_joint = jax.grad(server_loss)(joint)              # (b, K·r)
-        my = jax.lax.axis_index("pod")
         g_local = jax.lax.dynamic_slice_in_dim(g_joint, my * rep_dim, rep_dim, 1)
         g_q = jax.lax.optimization_barrier(g_local.astype(rep_dtype))
         g_local = (jax.lax.optimization_barrier(jax.lax.psum(g_q, "pod"))
                    / jax.lax.psum(1, "pod")).astype(jnp.float32)  # exchange 2
 
-        # ③: pseudo-labels from the gradient signal (sign-projection proxy of
-        # the k-means step — same information content, jit-static shape)
-        pseudo = jnp.argmax(g_local @ jax.random.normal(
-            jax.random.PRNGKey(0), (rep_dim, num_classes)), axis=-1)
+        # ③: pseudo-labels — the REAL gradient k-means (party-local; the
+        # whole Lloyd loop runs inside this program with no collectives)
+        k_km = jax.random.fold_in(jax.random.PRNGKey(0), my)
+        pseudo = clustering.gradient_pseudo_labels(
+            k_km, g_local, num_classes, kmeans_iters, use_kernel=False,
+            restarts=1)
 
-        # ④: LOCAL SSL — zero pod-axis collectives inside this loop
-        def local_step(i, wp):
-            def ssl_loss(wp):
-                z_o = _extract(wp, xo)
-                logit_o = z_o @ jax.random.normal(jax.random.PRNGKey(1),
-                                                  (rep_dim, num_classes))
-                l_s = jnp.mean(cross_entropy(logit_o, pseudo))
-                z_u = _extract(wp, xu)
-                l_u = jnp.mean(jnp.square(z_u - jax.lax.stop_gradient(
-                    jnp.roll(z_u, 1, axis=0))))             # consistency proxy
-                return l_s + 0.1 * l_u
-            g = jax.grad(ssl_loss)(wp)
-            return jax.tree_util.tree_map(lambda p, gg: p - lr * gg, wp, g)
+        # ④: LOCAL SSL via the engine step — zero pod-axis collectives
+        # inside this loop. Full-batch: labeled = (overlap, pseudo),
+        # unlabeled = the party-private pool.
+        h_params = head.init(jax.random.fold_in(jax.random.PRNGKey(1), my),
+                             ext.apply(wp, xo[:1]))
+        fm = jnp.mean(xu, axis=0)            # party-local x̄ for FixMatch-tab
+        pp = PartyParams(wp, h_params)
+        opt_state = tx.init(pp)
+        k_ssl = jax.random.fold_in(jax.random.PRNGKey(2), my)
 
-        wp = jax.lax.fori_loop(0, local_steps, local_step, wp)
+        def local_step(i, carry):
+            pp, opt_state = carry
+            pp, opt_state, _ = ssl_step(pp, opt_state, fm,
+                                        jax.random.fold_in(k_ssl, i),
+                                        xo, pseudo, xu)
+            return pp, opt_state
+
+        pp, _ = jax.lax.fori_loop(0, local_steps, local_step, (pp, opt_state))
+        wp = pp.extractor
 
         # ⑤: refreshed overlap reps up (exchange #3)
-        rep_o2 = _extract(wp, xo)
+        rep_o2 = ext.apply(wp, xo)
         rep2_q = jax.lax.optimization_barrier(rep_o2.astype(rep_dtype))
         reps2 = jax.lax.optimization_barrier(
             jax.lax.all_gather(rep2_q, "pod"))  # exchange 3

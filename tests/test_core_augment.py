@@ -1,6 +1,8 @@
 import jax
 import jax.numpy as jnp
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.augment import (strong_augment_image, tab_augment_pair,

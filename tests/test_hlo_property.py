@@ -3,6 +3,8 @@ for arbitrary compositions of matmuls, scans and nested scans."""
 import jax
 import jax.numpy as jnp
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.roofline.hlo_analysis import analyze_hlo_text

@@ -3,6 +3,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import pytest
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config
