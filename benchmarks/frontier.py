@@ -1,0 +1,188 @@
+"""The comm-accuracy frontier: every method x every scenario, one artifact.
+
+Reproduces the paper's comparative claims (Tab. 1-4 ordering: one-shot /
+few-shot VFL vs iterative VFL under limited overlap) as a machine-checkable
+benchmark. For each scenario in the registry selection it runs
+
+    one_shot   -- Alg. 1 (3 comm times)
+    few_shot   -- Alg. 2 (5 comm times)
+    iterative  -- SplitNN-style vanilla VFL (2 comm times / iteration)
+    fedcvt     -- FedCVT-style semi-supervised cross-view baseline
+
+and writes ``BENCH_frontier.json`` rows with per-method metric (AUC or
+accuracy), ledger bytes, comm times, and wall-clock.
+
+CI wiring (.github/workflows/ci.yml, job ``bench-smoke``)::
+
+    python -m benchmarks.frontier --smoke --check-gate
+
+``--smoke`` restricts to the registry's ``smoke``-tagged scenarios at
+CI-tractable sizes (< 3 min). ``--check-gate`` then enforces the paper's
+headline ordering on the fresh results: one-shot must dominate the
+iterative baseline on BOTH bytes (>= 100x less) and metric for every
+overlap<=64 scenario, and one-shot's ledger bytes must not regress above
+the recorded baseline (``benchmarks/frontier_baseline.json``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+
+from repro import scenarios
+from repro.core import (
+    IterativeConfig,
+    ProtocolConfig,
+    run_fedcvt,
+    run_few_shot,
+    run_one_shot,
+    run_vanilla,
+)
+
+BASELINE_PATH = os.path.join(os.path.dirname(__file__), "frontier_baseline.json")
+
+METHODS = ("one_shot", "few_shot", "iterative", "fedcvt")
+
+
+def run_scenario(spec, seed: int, smoke: bool, methods=METHODS):
+    """Run every method on one scenario; returns a list of result rows."""
+    bundle = scenarios.build(spec, seed=seed, smoke=smoke)
+    spec = bundle.spec
+    pcfg = ProtocolConfig(
+        client_epochs=spec.budget("client_epochs", 8),
+        server_epochs=spec.budget("server_epochs", 30),
+    )
+    if spec.fewshot_threshold is not None:
+        pcfg.fewshot_threshold = spec.fewshot_threshold
+    icfg = IterativeConfig(iterations=spec.budget("iterations", 300))
+    runners = {
+        "one_shot": lambda k: run_one_shot(
+            k, bundle.split, bundle.extractors, bundle.ssl_cfgs, pcfg
+        ),
+        "few_shot": lambda k: run_few_shot(
+            k, bundle.split, bundle.extractors, bundle.ssl_cfgs, pcfg
+        ),
+        "iterative": lambda k: run_vanilla(
+            k, bundle.split, bundle.extractors, bundle.ssl_cfgs, icfg
+        ),
+        "fedcvt": lambda k: run_fedcvt(
+            k, bundle.split, bundle.extractors, bundle.ssl_cfgs, icfg
+        ),
+    }
+    rows = []
+    for method in methods:
+        t0 = time.time()
+        res = runners[method](jax.random.PRNGKey(seed))
+        row = res.summary_row()
+        row.update(
+            scenario=spec.name,
+            seed=seed,
+            method=method,
+            wall_s=round(time.time() - t0, 2),
+            overlap=spec.overlap,
+            num_parties=spec.num_parties,
+            modality=spec.modality,
+        )
+        rows.append(row)
+        print(
+            "{scenario:>18s} {method:>9s} {metric_name}={metric:.4f} "
+            "bytes={comm_bytes:>10d} times={comm_times:>6d} "
+            "({wall_s:.0f}s)".format(**row),
+            flush=True,
+        )
+    return rows
+
+
+def check_gate(rows, baseline_path: str = BASELINE_PATH) -> list:
+    """The CI regression gate. Returns a list of violation strings."""
+    problems = []
+    by_key = {(r["scenario"], r["method"]): r for r in rows}
+    scenario_names = sorted({r["scenario"] for r in rows})
+
+    with open(baseline_path) as fh:
+        baseline = json.load(fh)
+
+    for name in scenario_names:
+        one = by_key.get((name, "one_shot"))
+        it = by_key.get((name, "iterative"))
+        if one is None:
+            continue
+        base = baseline.get(name)
+        if base is not None and one["comm_bytes"] > base["one_shot_bytes"]:
+            problems.append(
+                f"{name}: one-shot bytes regressed "
+                f"{one['comm_bytes']} > baseline {base['one_shot_bytes']}"
+            )
+        if it is None or one["overlap"] > 64:
+            continue
+        ratio = it["comm_bytes"] / max(one["comm_bytes"], 1)
+        if ratio < 100.0:
+            problems.append(
+                f"{name}: one-shot bytes advantage {ratio:.0f}x < 100x"
+            )
+        if one["metric"] < it["metric"]:
+            problems.append(
+                f"{name}: one-shot {one['metric']:.4f} below "
+                f"iterative {it['metric']:.4f} at overlap {one['overlap']}"
+            )
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="smoke-tagged scenarios only")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_frontier.json")
+    ap.add_argument(
+        "--scenarios",
+        nargs="+",
+        default=None,
+        help="explicit scenario names (default: tag-based selection)",
+    )
+    ap.add_argument(
+        "--check-gate",
+        action="store_true",
+        help="enforce the comm/accuracy dominance + bytes-regression gate",
+    )
+    ap.add_argument("--baseline", default=BASELINE_PATH)
+    args = ap.parse_args(argv)
+
+    if args.scenarios:
+        specs = [scenarios.get(n) for n in args.scenarios]
+    elif args.smoke:
+        specs = scenarios.by_tag("smoke")
+    else:
+        specs = scenarios.by_tag("frontier")
+
+    t0 = time.time()
+    rows = []
+    for spec in specs:
+        rows.extend(run_scenario(spec, args.seed, smoke=args.smoke))
+
+    blob = {
+        "mode": "smoke" if args.smoke else "full",
+        "seed": args.seed,
+        "wall_s": round(time.time() - t0, 2),
+        "rows": rows,
+    }
+    with open(args.out, "w") as fh:
+        json.dump(blob, fh, indent=2)
+    print(f"wrote {args.out}: {len(rows)} rows in {blob['wall_s']:.0f}s")
+
+    if args.check_gate:
+        problems = check_gate(rows, args.baseline)
+        if problems:
+            for p in problems:
+                print(f"GATE VIOLATION: {p}", file=sys.stderr)
+            return 1
+        print("gate: one-shot dominates iterative (bytes >=100x, metric) "
+              "and bytes match the recorded baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -7,8 +7,7 @@ import json
 import os
 from typing import Dict, List
 
-from repro.configs import INPUT_SHAPES, get_config
-from repro.roofline.analysis import HW, model_flops, roofline_terms
+from repro.roofline.analysis import roofline_terms
 
 DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
 

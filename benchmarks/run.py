@@ -25,11 +25,15 @@ def main() -> None:
     ap.add_argument("--skip", nargs="*", default=[])
     args, _ = ap.parse_known_args()
 
-    from benchmarks import ablation_fewshot, comm_cost, credit, kernels_bench, table1
+    from benchmarks import (ablation_fewshot, comm_cost, credit, frontier,
+                            kernels_bench, table1)
 
     sections = []
     if "comm" not in args.skip:
         sections.append(("comm_cost", comm_cost.main, []))
+    if "frontier" not in args.skip:
+        argv = [] if args.full else ["--smoke"]
+        sections.append(("frontier", frontier.main, argv))
     if "kernels" not in args.skip:
         sections.append(("kernels", kernels_bench.main, []))
     if "table1" not in args.skip:

@@ -13,7 +13,6 @@ from repro.data.synthetic import make_sequence_classification
 from repro.data.vertical import VerticalSplit
 from repro.models.zoo_extractor import make_zoo_extractor
 
-import jax.numpy as jnp
 import numpy as np
 
 

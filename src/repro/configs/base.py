@@ -2,9 +2,8 @@
 dry-run and smoke tests for every assigned architecture."""
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
-from typing import Dict, Optional, Tuple
+from dataclasses import dataclass, replace
+from typing import Dict, Optional
 
 
 @dataclass(frozen=True)

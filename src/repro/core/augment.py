@@ -13,7 +13,6 @@ where x̄ is the per-feature mean over the party's local data.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Tuple
 
 import jax

@@ -1,19 +1,26 @@
 """Baseline VFL methods from the paper's evaluation (§5.1):
 
-* ``run_vanilla``  — SplitNN-style iterative VFL: every iteration uploads
-  minibatch representations and downloads partial gradients (2 comm events
-  per client per iteration). Also used as the end-to-end finetuning stage of
-  "few-shot + finetune" (Tab. 1 last row).
+* ``run_vanilla``  — genuine per-round SplitNN iterative VFL: every iteration
+  uploads minibatch representations and downloads partial gradients (2 comm
+  events per client per iteration, CommLedger-instrumented per round). Also
+  used as the end-to-end finetuning stage of "few-shot + finetune" (Tab. 1
+  last row).
 * ``run_fedbcd``   — FedBCD [20]: Q local updates per communication round
   using the *stale* partial gradients.
-* ``run_fedcvt``   — FedCVT-lite [15]: iterative VFL where the server expands
-  each batch with unaligned samples whose missing-party representations are
-  attention-estimated from the overlap set and whose pseudo-labels pass a
-  confidence threshold (the cross-view-training idea, without the paper's
-  full 5-loss apparatus — see DESIGN.md §7).
+* ``run_fedcvt``   — FedCVT-style semi-supervised cross-view baseline [15]:
+  iterative VFL where each party's unaligned batch joins training with
+  attention-estimated missing-party representations and confidence-gated
+  pseudo-labels (the cross-view-training idea, without the paper's full
+  5-loss apparatus — see DESIGN.md §7).
 
-All baselines train *only* on information the respective method is allowed to
-see; all transfers go through the CommLedger.
+``run_vanilla`` and ``run_fedcvt`` execute through the engine's iterative
+session path (``repro.engine.iterative``): the whole S-iteration session is
+one jitted ``lax.scan`` program (or a Python loop over the cached jitted
+step with ``engine_mode="python"``), and the compiled session is cached
+across calls so scenario sweeps never recompile identical step math.
+
+All baselines train *only* on information the respective method is allowed
+to see; all transfers go through the CommLedger.
 """
 from __future__ import annotations
 
@@ -22,17 +29,15 @@ from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import optim
-from repro.core import estimator
-from repro.core.client import ClientParams, VFLClient, make_client
+from repro.core.client import ClientParams, VFLClient
 from repro.core.comm import CommLedger
-from repro.core.metrics import accuracy, binary_auc
-from repro.core.protocol import ProtocolConfig, VFLResult, _build_clients, _evaluate
+from repro.core.protocol import VFLResult, _build_clients, _evaluate
 from repro.core.server import VFLServer, concat_reps
 from repro.core.ssl import SSLConfig, cross_entropy
 from repro.data.loader import epoch_batches
+from repro.engine import iterative
 from repro.models.extractors import Model, make_classifier
 
 
@@ -42,9 +47,17 @@ class IterativeConfig:
     batch_size: int = 32
     client_lr: float = 0.01
     server_lr: float = 0.01
+    momentum: float = 0.9
     fedbcd_q: int = 5               # Q (paper: 5)
     fedcvt_threshold: float = 0.95
     eval_every: int = 200
+    engine_mode: str = "auto"       # "auto" | "scan" | "python" (DESIGN.md §8)
+
+    def iter_hparams(self) -> iterative.IterHParams:
+        return iterative.IterHParams(client_lr=self.client_lr,
+                                     server_lr=self.server_lr,
+                                     momentum=self.momentum,
+                                     fedcvt_threshold=self.fedcvt_threshold)
 
 
 def _init_server(key, server: VFLServer, reps):
@@ -54,40 +67,30 @@ def _init_server(key, server: VFLServer, reps):
     return server
 
 
-def _make_vanilla_step(clients: Sequence[VFLClient], server: VFLServer,
-                       cfg: IterativeConfig):
-    """Jointly-differentiated SplitNN iteration. Gradients are computed in one
-    jax.grad for efficiency, but the *communication* is exactly: reps up,
-    rep-grads down (logged by the caller with the true tensor sizes)."""
-    txs = [optim.sgd(cfg.client_lr, momentum=0.9) for _ in clients]
-    tx_s = optim.sgd(cfg.server_lr, momentum=0.9)
-    extractors = [c.extractor for c in clients]
-    classifier_apply = None  # bound at first call via server.classifier
+def _session_carry(clients: Sequence[VFLClient], server: VFLServer,
+                   cfg: IterativeConfig):
+    """(client_params, server_params, opt_states, opt_state_s) — the engine
+    session carry, initialized from the current client/server state."""
+    tx_c = optim.sgd(cfg.client_lr, momentum=cfg.momentum)
+    tx_s = optim.sgd(cfg.server_lr, momentum=cfg.momentum)
+    cp = tuple(ClientParams(*c.params) for c in clients)
+    return (cp, server.params,
+            tuple(tx_c.init(p) for p in cp), tx_s.init(server.params))
 
-    def make(server_classifier):
-        @jax.jit
-        def step(client_params: List, server_params, opt_states, opt_state_s,
-                 xs, y):
-            def loss_fn(cp_list, sp):
-                reps = [ext.apply(p.extractor, x)
-                        for ext, p, x in zip(extractors, cp_list, xs)]
-                logits = server_classifier.apply(sp, concat_reps(reps))
-                return jnp.mean(cross_entropy(logits, y))
 
-            loss, (g_clients, g_server) = jax.value_and_grad(
-                loss_fn, argnums=(0, 1))(client_params, server_params)
-            new_cp, new_os = [], []
-            for p, g, tx, os_ in zip(client_params, g_clients, txs, opt_states):
-                upd, os_ = tx.update(g, os_, p)
-                new_cp.append(optim.apply_updates(p, upd))
-                new_os.append(os_)
-            upd_s, opt_state_s = tx_s.update(g_server, opt_state_s, server_params)
-            server_params = optim.apply_updates(server_params, upd_s)
-            return new_cp, server_params, new_os, opt_state_s, loss
-
-        return step
-
-    return make, txs, tx_s
+def _log_iterative_rounds(ledger: CommLedger, clients: Sequence[VFLClient],
+                          iterations: int, bs: int, payload_factor: int = 1
+                          ) -> None:
+    """Per-iteration accounting: reps up + rep-grads down per client, both
+    (bs, rep_dim) float32 (× payload_factor when a method ships extra
+    batches, e.g. FedCVT's unaligned reps). Logged host-side around the
+    jitted session so every engine mode produces the identical ledger."""
+    for _ in range(iterations):
+        r_up, r_dn = ledger.next_round(), ledger.next_round()
+        for c in clients:
+            num = payload_factor * bs * c.extractor.rep_dim * 4
+            ledger.log_bytes(c.index, "up", "reps_batch", num, round=r_up)
+            ledger.log_bytes(c.index, "down", "grads_batch", num, round=r_dn)
 
 
 def run_vanilla(
@@ -109,38 +112,25 @@ def run_vanilla(
         reps0 = [c.extract(x[:2]) for c, x in zip(clients, split.aligned)]
         server = _init_server(ks, server, reps0)
 
-    make_step, txs, tx_s = _make_vanilla_step(clients, server, cfg)
-    step = make_step(server.classifier)
-    client_params = [c.params for c in clients]
-    server_params = server.params
-    opt_states = [tx.init(p) for tx, p in zip(txs, client_params)]
-    opt_state_s = tx_s.init(server_params)
-
     n = split.labels.shape[0]
     bs = min(cfg.batch_size, n)
-    rep_dim = clients[0].extractor.rep_dim
-    it = 0
     seed0 = int(jax.random.randint(key, (), 0, 2**31 - 1))
-    while it < cfg.iterations:
-        for idx in epoch_batches(n, bs, seed0 + it):
-            if it >= cfg.iterations:
-                break
-            xs = [x[idx] for x in split.aligned]
-            client_params, server_params, opt_states, opt_state_s, loss = step(
-                client_params, server_params, opt_states, opt_state_s,
-                xs, split.labels[idx])
-            # communication: reps up + grads down, both (bs, rep_dim) f32
-            r_up, r_dn = ledger.next_round(), ledger.next_round()
-            for c in clients:
-                ledger.log_bytes(c.index, "up", "reps_batch", bs * rep_dim * 4, round=r_up)
-                ledger.log_bytes(c.index, "down", "grads_batch", bs * rep_dim * 4, round=r_dn)
-            it += 1
+    schedule = iterative.build_iteration_schedule(seed0, n, cfg.batch_size,
+                                                  cfg.iterations)
+    carry = _session_carry(clients, server, cfg)
+    carry, losses = iterative.splitnn_session(
+        [c.extractor for c in clients], server.classifier, cfg.iter_hparams(),
+        carry, split.aligned, split.labels, schedule, mode=cfg.engine_mode)
+    cp, sp = carry[0], carry[1]
 
-    clients = [replace(c, params=ClientParams(*p)) for c, p in zip(clients, client_params)]
-    server.params = server_params
+    _log_iterative_rounds(ledger, clients, cfg.iterations, bs)
+    clients = [replace(c, params=ClientParams(*p)) for c, p in zip(clients, cp)]
+    server.params = sp
     name, metric = _evaluate(server, clients, split)
     return VFLResult(name, metric, ledger, clients, server,
-                     {"iterations": cfg.iterations})
+                     {"iterations": cfg.iterations,
+                      "engine_path": iterative.resolve_mode(cfg.engine_mode),
+                      "final_loss": float(losses[-1]) if len(losses) else None})
 
 
 def run_fedbcd(
@@ -159,8 +149,8 @@ def run_fedbcd(
     reps0 = [c.extract(x[:2]) for c, x in zip(clients, split.aligned)]
     server = _init_server(ks, server, reps0)
 
-    txs = [optim.sgd(cfg.client_lr, momentum=0.9) for _ in clients]
-    tx_s = optim.sgd(cfg.server_lr, momentum=0.9)
+    txs = [optim.sgd(cfg.client_lr, momentum=cfg.momentum) for _ in clients]
+    tx_s = optim.sgd(cfg.server_lr, momentum=cfg.momentum)
     exts = [c.extractor for c in clients]
     clf = server.classifier
     Q = cfg.fedbcd_q
@@ -239,10 +229,12 @@ def run_fedcvt(
     ssl_cfgs: Sequence[SSLConfig],
     cfg: IterativeConfig = IterativeConfig(),
 ) -> VFLResult:
-    """FedCVT-lite: vanilla iterative VFL + per-iteration training-set
-    expansion. Each round, the server attention-estimates missing reps of a
-    sampled unaligned batch and keeps samples whose classifier confidence
-    exceeds the threshold, training on them with their pseudo labels."""
+    """FedCVT-style semi-supervised baseline: vanilla iterative VFL +
+    per-iteration cross-view training-set expansion. Each round, missing
+    reps of a sampled unaligned batch are attention-estimated from the
+    overlap batch and samples whose classifier confidence exceeds the
+    threshold train with their pseudo labels. Runs as one engine session
+    (``repro.engine.iterative.fedcvt_session``)."""
     ledger = CommLedger()
     key, kc, ks = jax.random.split(key, 3)
     clients = _build_clients(kc, split, extractors, ssl_cfgs)
@@ -250,75 +242,27 @@ def run_fedcvt(
     reps0 = [c.extract(x[:2]) for c, x in zip(clients, split.aligned)]
     server = _init_server(ks, server, reps0)
 
-    txs = [optim.sgd(cfg.client_lr, momentum=0.9) for _ in clients]
-    tx_s = optim.sgd(cfg.server_lr, momentum=0.9)
-    exts = [c.extractor for c in clients]
-    clf = server.classifier
-    K = len(clients)
-
-    @jax.jit
-    def step(client_params, server_params, opt_states, opt_state_s,
-             xs_o, y, xs_u):
-        def loss_fn(cp_list, sp):
-            reps_o = [ext.apply(p.extractor, x) for ext, p, x in zip(exts, cp_list, xs_o)]
-            logits = clf.apply(sp, concat_reps(reps_o))
-            loss = jnp.mean(cross_entropy(logits, y))
-            # cross-view expansion: for each party's unaligned batch, estimate
-            # the other parties' reps from the *overlap* batch reps
-            for k_idx in range(K):
-                h_u = exts[k_idx].apply(cp_list[k_idx].extractor, xs_u[k_idx])
-                parts = []
-                for j in range(K):
-                    if j == k_idx:
-                        parts.append(h_u)
-                    else:
-                        parts.append(estimator.sdpa_transform(h_u, reps_o[k_idx], reps_o[j]))
-                logits_u = clf.apply(sp, concat_reps(parts))
-                p_u = jax.nn.softmax(jax.lax.stop_gradient(logits_u), axis=-1)
-                pseudo = jnp.argmax(p_u, axis=-1)
-                mask = (jnp.max(p_u, axis=-1) > cfg.fedcvt_threshold).astype(jnp.float32)
-                ce = cross_entropy(logits_u, pseudo)
-                loss = loss + jnp.sum(ce * mask) / jnp.maximum(jnp.sum(mask), 1.0)
-            return loss
-
-        loss, (g_c, g_s) = jax.value_and_grad(loss_fn, argnums=(0, 1))(
-            client_params, server_params)
-        new_cp, new_os = [], []
-        for p, g, tx, os_ in zip(client_params, g_c, txs, opt_states):
-            upd, os_ = tx.update(g, os_, p)
-            new_cp.append(optim.apply_updates(p, upd))
-            new_os.append(os_)
-        upd_s, opt_state_s = tx_s.update(g_s, opt_state_s, server_params)
-        return new_cp, optim.apply_updates(server_params, upd_s), new_os, opt_state_s, loss
-
-    client_params = [c.params for c in clients]
-    server_params = server.params
-    opt_states = [tx.init(p) for tx, p in zip(txs, client_params)]
-    opt_state_s = tx_s.init(server_params)
-
     n = split.labels.shape[0]
     bs = min(cfg.batch_size, n)
-    rep_dim = clients[0].extractor.rep_dim
-    rng = np.random.RandomState(0)
-    it = 0
     seed0 = int(jax.random.randint(key, (), 0, 2**31 - 1))
-    while it < cfg.iterations:
-        for idx in epoch_batches(n, bs, seed0 + it):
-            if it >= cfg.iterations:
-                break
-            xs_o = [x[idx] for x in split.aligned]
-            xs_u = [x[rng.randint(0, x.shape[0], size=bs)] for x in split.unaligned]
-            client_params, server_params, opt_states, opt_state_s, _ = step(
-                client_params, server_params, opt_states, opt_state_s,
-                xs_o, split.labels[idx], xs_u)
-            r_up, r_dn = ledger.next_round(), ledger.next_round()
-            for c in clients:
-                # overlap reps + unaligned reps up; both gradients down
-                ledger.log_bytes(c.index, "up", "reps_batch", 2 * bs * rep_dim * 4, round=r_up)
-                ledger.log_bytes(c.index, "down", "grads_batch", 2 * bs * rep_dim * 4, round=r_dn)
-            it += 1
+    schedule = iterative.build_iteration_schedule(seed0, n, cfg.batch_size,
+                                                  cfg.iterations)
+    u_schedules = iterative.build_unaligned_schedule(
+        0, [x.shape[0] for x in split.unaligned], bs, cfg.iterations)
+    carry = _session_carry(clients, server, cfg)
+    carry, losses = iterative.fedcvt_session(
+        [c.extractor for c in clients], server.classifier, cfg.iter_hparams(),
+        carry, split.aligned, split.labels, schedule,
+        split.unaligned, u_schedules, mode=cfg.engine_mode)
+    cp, sp = carry[0], carry[1]
 
-    clients = [replace(c, params=ClientParams(*p)) for c, p in zip(clients, client_params)]
-    server.params = server_params
+    # overlap reps + unaligned reps up; both gradients down
+    _log_iterative_rounds(ledger, clients, cfg.iterations, bs,
+                          payload_factor=2)
+    clients = [replace(c, params=ClientParams(*p)) for c, p in zip(clients, cp)]
+    server.params = sp
     name, metric = _evaluate(server, clients, split)
-    return VFLResult(name, metric, ledger, clients, server, {"iterations": cfg.iterations})
+    return VFLResult(name, metric, ledger, clients, server,
+                     {"iterations": cfg.iterations,
+                      "engine_path": iterative.resolve_mode(cfg.engine_mode),
+                      "final_loss": float(losses[-1]) if len(losses) else None})

@@ -61,6 +61,20 @@ class VFLResult:
     server: VFLServer
     diagnostics: dict = field(default_factory=dict)
 
+    def summary_row(self) -> dict:
+        """JSON-ready summary of the paper's three columns (metric, comm
+        bytes, comm times) — what benchmark tables serialize per method."""
+        row = {
+            "metric_name": self.metric_name,
+            "metric": float(self.metric),
+            "comm_bytes": int(self.ledger.total_bytes()),
+            "comm_times": int(self.ledger.comm_times()),
+        }
+        for k in ("iterations", "engine_path"):
+            if k in self.diagnostics:
+                row[k] = self.diagnostics[k]
+        return row
+
 
 # --------------------------------------------------------------------------
 def _build_clients(key, split: VerticalSplit, extractors: Sequence[Model],

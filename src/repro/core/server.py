@@ -7,11 +7,10 @@ never ships either to clients — only ∇_{H_o^k} L, C, and p̂.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Callable, List, Optional, Sequence, Tuple
+from typing import Any, Callable, List, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import optim
 from repro.core.ssl import cross_entropy

@@ -1,18 +1,23 @@
 from repro.data.synthetic import (
+    make_cluster_tabular,
     make_image_classification,
     make_tabular_credit,
     make_token_stream,
 )
-from repro.data.vertical import VerticalSplit, split_features, split_image_halves, make_vfl_partition
+from repro.data.vertical import (VerticalSplit, make_vfl_partition,
+                                 split_features, split_image_halves,
+                                 split_image_patches)
 from repro.data.loader import batch_iterator, epoch_batches
 
 __all__ = [
+    "make_cluster_tabular",
     "make_image_classification",
     "make_tabular_credit",
     "make_token_stream",
     "VerticalSplit",
     "split_features",
     "split_image_halves",
+    "split_image_patches",
     "make_vfl_partition",
     "batch_iterator",
     "epoch_batches",

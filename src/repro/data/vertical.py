@@ -8,10 +8,9 @@ Implements the paper's data protocol (§5.1):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Optional, Sequence
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -50,6 +49,28 @@ def split_image_halves(x: jnp.ndarray, num_parties: int = 2) -> List[jnp.ndarray
     return out
 
 
+def split_image_patches(x: jnp.ndarray, grid: Sequence[int] = (2, 2)
+                        ) -> List[jnp.ndarray]:
+    """Split (N, H, W, C) images into a ``grid = (rows, cols)`` of patches —
+    the K = rows×cols image-*patch* party layout (e.g. 4 parties each hold
+    one quadrant), generalizing the paper's vertical-strip split."""
+    rows, cols = grid
+    H, W = x.shape[1], x.shape[2]
+    hs = [H // rows] * rows
+    hs[-1] += H - sum(hs)
+    ws = [W // cols] * cols
+    ws[-1] += W - sum(ws)
+    out = []
+    r0 = 0
+    for h in hs:
+        c0 = 0
+        for w in ws:
+            out.append(x[:, r0:r0 + h, c0:c0 + w, :])
+            c0 += w
+        r0 += h
+    return out
+
+
 def split_features(x: jnp.ndarray, sizes: Sequence[int]) -> List[jnp.ndarray]:
     """Split (N, D) feature matrix into contiguous blocks of given sizes."""
     assert sum(sizes) == x.shape[1], (sizes, x.shape)
@@ -60,8 +81,14 @@ def split_features(x: jnp.ndarray, sizes: Sequence[int]) -> List[jnp.ndarray]:
     return out
 
 
-def _split_fn_for(x: jnp.ndarray, num_parties: int, feature_sizes: Optional[Sequence[int]]):
+def _split_fn_for(x: jnp.ndarray, num_parties: int,
+                  feature_sizes: Optional[Sequence[int]],
+                  image_grid: Optional[Sequence[int]] = None):
     if x.ndim == 4:
+        if image_grid is not None:
+            assert image_grid[0] * image_grid[1] == num_parties, (
+                image_grid, num_parties)
+            return lambda arr: split_image_patches(arr, image_grid)
         return lambda arr: split_image_halves(arr, num_parties)
     if feature_sizes is None:
         d = x.shape[1]
@@ -80,6 +107,7 @@ def make_vfl_partition(
     feature_sizes: Optional[Sequence[int]] = None,
     seed: int = 0,
     num_classes: Optional[int] = None,
+    image_grid: Optional[Sequence[int]] = None,
 ) -> VerticalSplit:
     """Sample N_o aligned rows; split the rest evenly into private pools."""
     n = x.shape[0]
@@ -94,7 +122,7 @@ def make_vfl_partition(
     per = len(pool) // num_parties
     party_idx = [pool[k * per:(k + 1) * per] for k in range(num_parties)]
 
-    split = _split_fn_for(x, num_parties, feature_sizes)
+    split = _split_fn_for(x, num_parties, feature_sizes, image_grid)
     aligned_parts = split(jnp.asarray(x)[aligned_idx])
     test_parts = split(jnp.asarray(x)[test_idx])
     unaligned_parts, unaligned_labels = [], []

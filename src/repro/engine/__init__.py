@@ -24,8 +24,10 @@ from repro.engine.local_ssl import (
     train_party_ssl,
 )
 from repro.engine.dispatch import estimate_missing, pseudo_labels
+from repro.engine import iterative
 
 __all__ = [
+    "iterative",
     "PartyParams",
     "PartyTask",
     "Schedule",

@@ -1,0 +1,363 @@
+"""Iterative split-NN VFL sessions as ONE cached, jitted engine program.
+
+The iterative baselines (vanilla SplitNN, the FedCVT-style cross-view
+baseline) used to build an ad-hoc ``jax.jit`` step inside every
+``run_*`` call: each invocation re-traced and re-compiled identical step
+math, so scenario sweeps (``benchmarks/frontier.py`` runs every baseline
+across an overlap sweep of one task) paid full compile time per scenario
+point. This module is the iterative counterpart of ``engine.local_ssl``
+(DESIGN.md §8):
+
+* ``make_splitnn_step_fn`` — THE jointly-differentiated split-NN iteration
+  (reps up, rep-gradients down; the communication is logged by the caller
+  with the true tensor sizes);
+* ``make_fedcvt_step_fn``  — the same iteration plus FedCVT-style
+  cross-view training: unaligned batches whose missing-party reps are
+  SDPA-estimated from the overlap batch join the loss when their
+  pseudo-label confidence clears a threshold;
+* ``run_iterative_session`` — executes S iterations either as one jitted
+  ``lax.scan`` over a precomputed minibatch schedule (``"scan"``, the
+  fast path) or as a Python loop over the cached jitted step
+  (``"python"``).
+
+Compiled callables are cached module-wide, keyed on the *semantic*
+identity of the party models (apply-fn code object + closure cells — the
+same guarantee ``local_ssl._apply_fns_match`` relies on) plus the
+optimizer hyper-parameters, so repeated sessions (another seed, another
+scenario point with equal minibatch shapes) re-use the compiled program
+instead of re-tracing. ``session_cache_stats()`` exposes hit/miss
+counters; tests pin the no-recompile contract with them.
+
+Communication stays host-side: callers log per-round ledger events
+around the jitted session, so both execution modes produce byte-identical
+CommLedgers (the engine-refactor invariant of ``benchmarks/comm_cost``).
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.data.loader import epoch_batches
+from repro.models.extractors import Model
+
+
+@dataclass(frozen=True)
+class IterHParams:
+    """Optimizer hyper-parameters of one iterative session (hashable — part
+    of the session-cache key)."""
+    client_lr: float = 0.01
+    server_lr: float = 0.01
+    momentum: float = 0.9
+    fedcvt_threshold: float = 0.95
+
+
+def resolve_mode(mode: str) -> str:
+    """Map a requested engine mode onto an iterative execution path.
+
+    ``"scan"`` (and the protocol layer's ``"vmap"``, its analogue for the
+    one-shot engine) → the fused lax.scan session; ``"python"`` → per-step
+    loop over the cached jitted step. ``"auto"`` honors the CI matrix knob
+    ``REPRO_ENGINE_MODE`` and otherwise takes the fast path.
+    """
+    if mode == "python":
+        return "python"
+    if mode in ("scan", "vmap"):
+        return "scan"
+    if mode == "auto":
+        env = os.environ.get("REPRO_ENGINE_MODE", "")
+        return "python" if env == "python" else "scan"
+    raise ValueError(f"unknown iterative engine mode {mode!r}")
+
+
+# ----------------------------------------------------------- session cache
+_SESSION_CACHE: Dict[tuple, Any] = {}
+_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def session_cache_stats() -> Dict[str, int]:
+    return dict(_CACHE_STATS)
+
+
+def clear_session_cache() -> None:
+    _SESSION_CACHE.clear()
+    _CACHE_STATS["hits"] = _CACHE_STATS["misses"] = 0
+
+
+def _model_key(m: Model) -> tuple:
+    """Semantic identity of a Model: apply-fn code + captured closure values.
+
+    Two ``make_mlp_extractor(rep_dim=16, hidden=(32,))`` calls return
+    distinct closures with equal keys, so sessions built for one re-serve
+    the other (their apply fns are pure and parameters travel as
+    arguments, never in the closure)."""
+    fn = m.apply
+    cells = []
+    for c in (fn.__closure__ or ()):
+        v = c.cell_contents
+        try:
+            hash(v)
+            cells.append(v)
+        except TypeError:
+            try:
+                # arrays: digest the full contents — repr() truncates large
+                # arrays, which could alias two different constants onto one
+                # cache key and silently re-serve the wrong program
+                arr = np.asarray(v)
+                if arr.dtype == object:
+                    raise TypeError("not a numeric array")
+                import hashlib
+                cells.append(("arr", arr.shape, str(arr.dtype),
+                              hashlib.sha1(arr.tobytes()).hexdigest()))
+            except Exception:
+                # un-digestable cell (dict/object closures): a fresh token
+                # guarantees a cache MISS — recompiling is safe, re-serving
+                # another model's program is not (and repr()/pointer bytes
+                # can collide across gc'd addresses)
+                cells.append(object())
+    return (getattr(fn, "__code__", None), tuple(cells), m.rep_dim)
+
+
+def _cached(key: tuple, builder: Callable[[], Any]) -> Any:
+    fn = _SESSION_CACHE.get(key)
+    if fn is None:
+        _CACHE_STATS["misses"] += 1
+        fn = builder()
+        _SESSION_CACHE[key] = fn
+    else:
+        _CACHE_STATS["hits"] += 1
+    return fn
+
+
+# ------------------------------------------------------------ step factories
+def make_splitnn_step_fn(extractors: Sequence[Model], classifier: Model,
+                         hp: IterHParams):
+    """One SplitNN iteration: joint value_and_grad over every party's
+    extractor and the server classifier. Gradients are computed in one
+    backward pass for efficiency, but the *communication* of the iteration
+    is exactly reps-up + rep-grads-down (the caller logs it).
+
+    Returns ``step(carry, xs, y, xs_u=None) -> (carry, loss)`` with
+    ``carry = (client_params, server_params, opt_states, opt_state_s)``.
+    """
+    from repro.core.server import concat_reps   # deferred: core imports engine
+    from repro.core.ssl import cross_entropy
+
+    extractors = tuple(extractors)
+    txs = tuple(optim.sgd(hp.client_lr, momentum=hp.momentum)
+                for _ in extractors)
+    tx_s = optim.sgd(hp.server_lr, momentum=hp.momentum)
+
+    def step(carry, xs, y, xs_u=None):
+        del xs_u
+        cp, sp, oss, os_s = carry
+
+        def loss_fn(cp_t, sp_):
+            reps = [ext.apply(p.extractor, x)
+                    for ext, p, x in zip(extractors, cp_t, xs)]
+            logits = classifier.apply(sp_, concat_reps(reps))
+            return jnp.mean(cross_entropy(logits, y))
+
+        loss, (g_c, g_s) = jax.value_and_grad(loss_fn, argnums=(0, 1))(cp, sp)
+        new_cp, new_os = [], []
+        for p, g, tx, os_ in zip(cp, g_c, txs, oss):
+            upd, os_ = tx.update(g, os_, p)
+            new_cp.append(optim.apply_updates(p, upd))
+            new_os.append(os_)
+        upd_s, os_s = tx_s.update(g_s, os_s, sp)
+        sp = optim.apply_updates(sp, upd_s)
+        return (tuple(new_cp), sp, tuple(new_os), os_s), loss
+
+    return step
+
+
+def make_fedcvt_step_fn(extractors: Sequence[Model], classifier: Model,
+                        hp: IterHParams):
+    """SplitNN iteration + FedCVT-style cross-view expansion: each party's
+    unaligned batch is completed with SDPA-estimated missing-party reps and
+    joins the loss where the (stop-gradient) pseudo-label confidence clears
+    ``hp.fedcvt_threshold``. Signature matches ``make_splitnn_step_fn`` with
+    ``xs_u`` required."""
+    from repro.core import estimator          # deferred: core imports engine
+    from repro.core.server import concat_reps
+    from repro.core.ssl import cross_entropy
+
+    extractors = tuple(extractors)
+    txs = tuple(optim.sgd(hp.client_lr, momentum=hp.momentum)
+                for _ in extractors)
+    tx_s = optim.sgd(hp.server_lr, momentum=hp.momentum)
+    K = len(extractors)
+
+    def step(carry, xs, y, xs_u):
+        cp, sp, oss, os_s = carry
+
+        def loss_fn(cp_t, sp_):
+            reps_o = [ext.apply(p.extractor, x)
+                      for ext, p, x in zip(extractors, cp_t, xs)]
+            logits = classifier.apply(sp_, concat_reps(reps_o))
+            loss = jnp.mean(cross_entropy(logits, y))
+            for k_idx in range(K):
+                h_u = extractors[k_idx].apply(cp_t[k_idx].extractor,
+                                              xs_u[k_idx])
+                parts = []
+                for j in range(K):
+                    if j == k_idx:
+                        parts.append(h_u)
+                    else:
+                        parts.append(estimator.sdpa_transform(
+                            h_u, reps_o[k_idx], reps_o[j]))
+                logits_u = classifier.apply(sp_, concat_reps(parts))
+                p_u = jax.nn.softmax(jax.lax.stop_gradient(logits_u), axis=-1)
+                pseudo = jnp.argmax(p_u, axis=-1)
+                mask = (jnp.max(p_u, axis=-1)
+                        > hp.fedcvt_threshold).astype(jnp.float32)
+                ce = cross_entropy(logits_u, pseudo)
+                loss = loss + jnp.sum(ce * mask) / jnp.maximum(jnp.sum(mask),
+                                                               1.0)
+            return loss
+
+        loss, (g_c, g_s) = jax.value_and_grad(loss_fn, argnums=(0, 1))(cp, sp)
+        new_cp, new_os = [], []
+        for p, g, tx, os_ in zip(cp, g_c, txs, oss):
+            upd, os_ = tx.update(g, os_, p)
+            new_cp.append(optim.apply_updates(p, upd))
+            new_os.append(os_)
+        upd_s, os_s = tx_s.update(g_s, os_s, sp)
+        sp = optim.apply_updates(sp, upd_s)
+        return (tuple(new_cp), sp, tuple(new_os), os_s), loss
+
+    return step
+
+
+# -------------------------------------------------------------- schedules
+def build_iteration_schedule(seed: int, n: int, batch_size: int,
+                             iterations: int) -> jnp.ndarray:
+    """(S, bs) int32 minibatch indices: shuffled epochs, drop-remainder,
+    truncated/cycled to exactly ``iterations`` rows — materialized up front
+    so the scan path and the Python path consume identical batches."""
+    bs = min(batch_size, n)
+    if iterations <= 0:                      # a no-op session is valid
+        return jnp.zeros((0, bs), jnp.int32)
+    rows: List[np.ndarray] = []
+    e = 0
+    while len(rows) < iterations:
+        for b in epoch_batches(n, bs, seed + e):
+            rows.append(b)
+            if len(rows) == iterations:
+                break
+        e += 1
+    return jnp.asarray(np.stack(rows), jnp.int32)
+
+
+def build_unaligned_schedule(seed: int, pool_sizes: Sequence[int],
+                             batch_size: int, iterations: int
+                             ) -> Tuple[jnp.ndarray, ...]:
+    """Per-party (S, bs) uniform draws from each private pool (FedCVT's
+    unaligned batches)."""
+    rng = np.random.RandomState(seed)
+    return tuple(jnp.asarray(rng.randint(0, n_u, size=(iterations, batch_size)),
+                             jnp.int32)
+                 for n_u in pool_sizes)
+
+
+# ---------------------------------------------------------------- sessions
+def run_iterative_session(
+    cache_key: tuple,
+    make_step: Callable[[], Callable],
+    carry,
+    xs: Sequence[jnp.ndarray],
+    y: jnp.ndarray,
+    schedule: jnp.ndarray,
+    mode: str = "auto",
+    xs_u: Optional[Sequence[jnp.ndarray]] = None,
+    u_schedules: Optional[Sequence[jnp.ndarray]] = None,
+):
+    """Run S = ``schedule.shape[0]`` iterations of ``make_step()``'s step.
+
+    ``cache_key`` identifies the step math (models + hyper-parameters);
+    the compiled step/session is cached under it so later sessions with
+    the same key (and minibatch shapes) never recompile. Training data
+    travels as *arguments*, never in the cached closure, so one compiled
+    session serves every seed/scenario point of equal shapes.
+
+    Returns ``(carry, losses)`` with ``losses`` of shape (S,).
+    """
+    mode = resolve_mode(mode)
+    xs = tuple(xs)
+    if schedule.shape[0] == 0:               # zero iterations: no-op session
+        return carry, jnp.zeros((0,))
+    has_u = xs_u is not None
+    if has_u:
+        xs_u = tuple(xs_u)
+        u_schedules = tuple(u_schedules)
+
+    if mode == "python":
+        step = _cached(("step", has_u) + cache_key,
+                       lambda: jax.jit(make_step()))
+        sched = np.asarray(schedule)
+        u_scheds = ([np.asarray(s) for s in u_schedules] if has_u else None)
+        losses = []
+        for i in range(sched.shape[0]):
+            xb = tuple(x[sched[i]] for x in xs)
+            xub = (tuple(xu[us[i]] for xu, us in zip(xs_u, u_scheds))
+                   if has_u else None)
+            carry, loss = step(carry, xb, y[sched[i]], xub)
+            losses.append(loss)
+        return carry, jnp.stack(losses) if losses else jnp.zeros((0,))
+
+    # "scan": the whole session is one jitted program with donated carry.
+    if has_u:
+        def build():
+            step = make_step()
+
+            def session(carry, xs, y, schedule, xs_u, u_scheds):
+                def body(c, inp):
+                    il, ius = inp
+                    return step(c, tuple(x[il] for x in xs), y[il],
+                                tuple(xu[iu] for xu, iu in zip(xs_u, ius)))
+
+                return jax.lax.scan(body, carry, (schedule, u_scheds))
+
+            return jax.jit(session, donate_argnums=(0,))
+
+        session = _cached(("scan", True) + cache_key, build)
+        return session(carry, xs, y, schedule, xs_u, u_schedules)
+
+    def build():
+        step = make_step()
+
+        def session(carry, xs, y, schedule):
+            def body(c, il):
+                return step(c, tuple(x[il] for x in xs), y[il], None)
+
+            return jax.lax.scan(body, carry, schedule)
+
+        return jax.jit(session, donate_argnums=(0,))
+
+    session = _cached(("scan", False) + cache_key, build)
+    return session(carry, xs, y, schedule)
+
+
+def splitnn_session(extractors, classifier, hp: IterHParams, carry, xs, y,
+                    schedule, mode: str = "auto"):
+    """SplitNN session with the cache key derived from model semantics."""
+    key = ("splitnn", tuple(_model_key(e) for e in extractors),
+           _model_key(classifier), hp)
+    return run_iterative_session(
+        key, lambda: make_splitnn_step_fn(extractors, classifier, hp),
+        carry, xs, y, schedule, mode)
+
+
+def fedcvt_session(extractors, classifier, hp: IterHParams, carry, xs, y,
+                   schedule, xs_u, u_schedules, mode: str = "auto"):
+    """FedCVT-style session with the cache key derived from model semantics."""
+    key = ("fedcvt", tuple(_model_key(e) for e in extractors),
+           _model_key(classifier), hp)
+    return run_iterative_session(
+        key, lambda: make_fedcvt_step_fn(extractors, classifier, hp),
+        carry, xs, y, schedule, mode, xs_u=xs_u, u_schedules=u_schedules)

@@ -29,6 +29,7 @@ this at atol 1e-5).
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass
 from typing import TYPE_CHECKING, Any, List, NamedTuple, Optional, Sequence, Tuple
 
@@ -294,6 +295,16 @@ def train_clients_ssl(key: jax.Array, tasks: Sequence[PartyTask],
         raise ValueError(f"unknown engine mode {mode!r}")
     keys = list(jax.random.split(key, len(tasks)))
     homogeneous = tasks_are_homogeneous(tasks)
+    if mode == "auto":
+        # CI matrix knob: REPRO_ENGINE_MODE=python forces the fallback loop;
+        # =vmap prefers the fast path whenever the tasks allow it (without
+        # the hard failure an explicit mode="vmap" argument carries), so one
+        # env var exercises either engine path across the whole suite.
+        env = os.environ.get("REPRO_ENGINE_MODE", "")
+        if env == "python":
+            mode = "python"
+        elif env in ("vmap", "scan") and homogeneous:
+            mode = "vmap"
     if mode == "vmap" and not homogeneous:
         raise ValueError("engine mode 'vmap' requires homogeneous party "
                          "tasks (same param/data shapes and SSLConfig); "

@@ -22,9 +22,6 @@ MXU alignment: BN multiple of 8; d and C padded to multiples of 128.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
 
 from repro.kernels import interpret_mode

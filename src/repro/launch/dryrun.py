@@ -18,7 +18,7 @@ import json
 import re
 import time
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

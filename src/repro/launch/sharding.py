@@ -14,10 +14,9 @@ Baseline policy (the §Perf hillclimb iterates from here):
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # containers whose children carry leading layer-stack dims

@@ -8,7 +8,7 @@ precomputed patch/frame embeddings of the right shape.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ the caller may jit, scan, or close inside a shard_map program.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

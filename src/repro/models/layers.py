@@ -15,7 +15,6 @@ can be swapped in per layer.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -13,7 +13,7 @@ mean dispatch fraction per expert) is returned for the trainer to add.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,7 @@ Single SSM group (G=1), matching the assigned Mamba2/Zamba2 scales.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -9,13 +9,10 @@ FixMatch-tab masking over embeddings) runs unchanged on top.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
-
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.models import layers as L
 from repro.models.extractors import Model
 from repro.models.model_zoo import build_model
 

@@ -10,7 +10,7 @@ Everything is a pytree; everything jits.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Optional, Sequence
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

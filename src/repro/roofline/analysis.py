@@ -11,7 +11,7 @@ flops) is computed analytically per config for the usefulness ratio.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict
 
 from repro.configs.base import ArchConfig, InputShape
 

@@ -19,7 +19,6 @@ HLO is the per-device partitioned module, so every number is PER DEVICE.
 """
 from __future__ import annotations
 
-import json
 import re
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple

@@ -1,0 +1,26 @@
+"""Scenario registry + catalog: named, parameterised VFL problem instances.
+
+Importing this package registers the full catalog. See DESIGN.md §8.
+"""
+from repro.scenarios.registry import (
+    GENERATORS,
+    ScenarioBundle,
+    ScenarioSpec,
+    build,
+    by_tag,
+    get,
+    names,
+    register,
+)
+from repro.scenarios import catalog  # noqa: F401  (registers the catalog)
+
+__all__ = [
+    "GENERATORS",
+    "ScenarioBundle",
+    "ScenarioSpec",
+    "build",
+    "by_tag",
+    "get",
+    "names",
+    "register",
+]

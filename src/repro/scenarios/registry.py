@@ -1,0 +1,156 @@
+"""Declarative scenario registry (DESIGN.md §8).
+
+A *scenario* is a named, fully parameterised VFL problem instance: which
+synthetic generator to draw from (and with which knobs), how many parties
+hold which feature blocks, how many rows overlap, which extractor
+architecture each party trains, and which SSL recipe the local sessions
+use. Scenarios are what the benchmark frontier sweeps over and what tests
+pin — one string names the whole experimental condition:
+
+    from repro import scenarios
+
+    bundle = scenarios.build("hard/overlap-32", seed=0)
+    res = run_one_shot(key, bundle.split, bundle.extractors,
+                       bundle.ssl_cfgs, ProtocolConfig(...))
+
+Specs are frozen dataclasses (hashable, reproducible from their fields
+alone); ``spec.smoke()`` returns a shrunken copy of the same condition for
+CI-speed runs. The catalog of registered scenarios lives in
+``repro.scenarios.catalog`` and covers the axes the paper's evaluation
+varies: overlap size 32→2048, feature skew, label noise, 2→8 parties,
+tabular + image-strip + image-patch modalities, and the hardened
+limited-overlap task on which iterative VFL cannot fit the overlap.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+
+from repro.core.ssl import SSLConfig
+from repro.data import synthetic, vertical
+from repro.models import make_cnn_extractor, make_mlp_extractor
+from repro.models.extractors import Model
+
+GENERATORS: Dict[str, Callable] = {
+    "tabular_credit": synthetic.make_tabular_credit,
+    "cluster_tabular": synthetic.make_cluster_tabular,
+    "image_classification": synthetic.make_image_classification,
+}
+
+
+@dataclass(frozen=True)
+class ScenarioSpec:
+    """One named experimental condition. All fields are hashable values so a
+    spec round-trips through ``dataclasses.replace`` and dict keys."""
+
+    name: str
+    modality: str                 # "tabular" | "image"
+    generator: str                # key into GENERATORS
+    overlap: int                  # N_o
+    num_samples: int
+    num_parties: int = 2
+    gen_params: Tuple[Tuple[str, Any], ...] = ()
+    feature_sizes: Optional[Tuple[int, ...]] = None   # tabular block sizes
+    image_grid: Optional[Tuple[int, int]] = None      # (rows, cols) patches
+    rep_dim: int = 16
+    hidden: Tuple[int, ...] = (64,)                   # MLP extractor widths
+    widths: Tuple[int, ...] = (8, 16)                 # CNN stage widths
+    blocks_per_stage: int = 1
+    ssl_params: Tuple[Tuple[str, Any], ...] = ()
+    fewshot_threshold: Optional[float] = None         # Eq. 9 gate t (None = default)
+    budgets: Tuple[Tuple[str, int], ...] = ()         # training-budget hints
+    tags: Tuple[str, ...] = ()
+    smoke_overlap: int = 32
+    smoke_samples: int = 2000
+    description: str = ""
+
+    def budget(self, key: str, default: int) -> int:
+        """Per-scenario training-budget hint (epochs/iterations), with a
+        caller-supplied default."""
+        return dict(self.budgets).get(key, default)
+
+    def smoke(self) -> "ScenarioSpec":
+        """CI-speed variant of the same condition: capped overlap and sample
+        count, identical generator/architecture/SSL parameters."""
+        return replace(self,
+                       overlap=min(self.overlap, self.smoke_overlap),
+                       num_samples=min(self.num_samples, self.smoke_samples))
+
+
+@dataclass
+class ScenarioBundle:
+    """A built scenario: the vertical split plus per-party model stacks."""
+
+    spec: ScenarioSpec
+    split: vertical.VerticalSplit
+    extractors: List[Model]
+    ssl_cfgs: List[SSLConfig]
+
+
+_REGISTRY: Dict[str, ScenarioSpec] = {}
+
+
+def register(spec: ScenarioSpec) -> ScenarioSpec:
+    if spec.name in _REGISTRY:
+        raise ValueError(f"scenario {spec.name!r} already registered")
+    if spec.generator not in GENERATORS:
+        raise ValueError(f"unknown generator {spec.generator!r}")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get(name: str) -> ScenarioSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        known = ", ".join(sorted(_REGISTRY))
+        raise KeyError(f"unknown scenario {name!r}; registered: {known}")
+
+
+def names() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def by_tag(tag: str) -> List[ScenarioSpec]:
+    return [_REGISTRY[n] for n in sorted(_REGISTRY)
+            if tag in _REGISTRY[n].tags]
+
+
+def _make_extractors(spec: ScenarioSpec) -> List[Model]:
+    if spec.modality == "image":
+        return [make_cnn_extractor(rep_dim=spec.rep_dim, widths=spec.widths,
+                                   blocks_per_stage=spec.blocks_per_stage)
+                for _ in range(spec.num_parties)]
+    return [make_mlp_extractor(rep_dim=spec.rep_dim, hidden=spec.hidden)
+            for _ in range(spec.num_parties)]
+
+
+def _make_ssl_cfgs(spec: ScenarioSpec) -> List[SSLConfig]:
+    params = dict(spec.ssl_params)
+    if spec.modality == "image":
+        cfg = SSLConfig(modality="image", **params)
+    else:
+        cfg = SSLConfig(modality="tabular", **params)
+    return [cfg] * spec.num_parties
+
+
+def build(name_or_spec, seed: int = 0, smoke: bool = False) -> ScenarioBundle:
+    """Materialize a scenario: draw the synthetic dataset, partition it
+    vertically, and construct the per-party extractor/SSL stacks."""
+    spec = (name_or_spec if isinstance(name_or_spec, ScenarioSpec)
+            else get(name_or_spec))
+    if smoke:
+        spec = spec.smoke()
+    gen = GENERATORS[spec.generator]
+    x, y = gen(jax.random.PRNGKey(1000 + seed), spec.num_samples,
+               **dict(spec.gen_params))
+    num_classes = int(y.max()) + 1
+    split = vertical.make_vfl_partition(
+        x, y, overlap_size=spec.overlap, num_parties=spec.num_parties,
+        feature_sizes=spec.feature_sizes, seed=seed,
+        num_classes=num_classes, image_grid=spec.image_grid)
+    return ScenarioBundle(spec=spec, split=split,
+                          extractors=_make_extractors(spec),
+                          ssl_cfgs=_make_ssl_cfgs(spec))

@@ -1,9 +1,7 @@
-import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
 
@@ -30,7 +28,7 @@ def test_latest_step(tmp_path):
 
 # ------------------------------------------------------------ sharding -----
 def test_param_specs_respect_divisibility():
-    from jax.sharding import Mesh, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
     from repro.launch.sharding import param_spec
 
     class FakeMesh:

@@ -4,7 +4,7 @@ import pytest
 
 from repro.core.estimator import (estimate_missing_parties, infer_prob,
                                   sdpa_transform)
-from repro.core.ssl import SSLConfig, cross_entropy, ssl_loss
+from repro.core.ssl import SSLConfig, ssl_loss
 
 
 # ------------------------------------------------------------ SSL loss -----

@@ -1,7 +1,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.data import (batch_iterator, make_image_classification,
                         make_tabular_credit, make_token_stream,

@@ -66,8 +66,12 @@ def test_vmap_equivalent_to_python_loop(homo_split):
             assert abs(mv[name] - mp[name]) < 1e-4, (name, mv[name], mp[name])
 
 
-def test_auto_dispatch(homo_split):
-    """auto → vmap on homogeneous zoos, Python fallback on heterogeneous."""
+def test_auto_dispatch(homo_split, monkeypatch):
+    """auto → vmap on homogeneous zoos, Python fallback on heterogeneous.
+
+    Pins the DEFAULT dispatch, so the CI matrix's REPRO_ENGINE_MODE
+    override (which deliberately re-steers "auto") is stripped here."""
+    monkeypatch.delenv("REPRO_ENGINE_MODE", raising=False)
     clients = _clients(jax.random.PRNGKey(1), homo_split, [0, 1])
     tasks = _tasks(jax.random.PRNGKey(2), homo_split, clients)
     assert engine.tasks_are_homogeneous(tasks)
@@ -89,9 +93,11 @@ def test_auto_dispatch(homo_split):
                                  mode="vmap")
 
 
-def test_vmap_mode_honored_for_single_party(homo_split):
+def test_vmap_mode_honored_for_single_party(homo_split, monkeypatch):
     """Explicit mode='vmap' must run the fast path even with K=1 (auto may
-    still prefer the plain loop there)."""
+    still prefer the plain loop there). Default-dispatch test: the CI
+    matrix's REPRO_ENGINE_MODE override is stripped."""
+    monkeypatch.delenv("REPRO_ENGINE_MODE", raising=False)
     clients = _clients(jax.random.PRNGKey(1), homo_split, [0, 1])[:1]
     tasks = _tasks(jax.random.PRNGKey(2), homo_split, clients)[:1]
     _, _, vmapped = engine.train_clients_ssl(jax.random.PRNGKey(3), tasks, HP,

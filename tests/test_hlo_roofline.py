@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.roofline.analysis import HW, active_params, model_flops, roofline_terms
+from repro.roofline.analysis import active_params, model_flops, roofline_terms
 from repro.roofline.hlo_analysis import analyze_hlo_text
 
 

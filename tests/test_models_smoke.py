@@ -1,14 +1,13 @@
 """Per-architecture smoke tests (deliverable f): every assigned config's
 REDUCED variant runs one forward/train step + one decode step on CPU with
 correct shapes and no NaNs."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import pytest
 
 from repro import optim
-from repro.configs import INPUT_SHAPES, all_configs, get_config
+from repro.configs import all_configs, get_config
 from repro.configs.base import InputShape
 from repro.launch import specs as SP
 from repro.launch.steps import make_optimizer, make_train_step

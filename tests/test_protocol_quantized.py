@@ -2,7 +2,6 @@
 the paper's f32 accounting at indistinguishable utility."""
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.core import ProtocolConfig, SSLConfig, run_one_shot
 from repro.data import make_tabular_credit, make_vfl_partition

@@ -8,11 +8,8 @@ The headline claims, scaled to CPU-sized synthetics:
   4. the image pipeline (CNN extractors, halved images) runs end to end.
 """
 import jax
-import jax.numpy as jnp
-import pytest
 
-from repro.core import (IterativeConfig, ProtocolConfig, SSLConfig,
-                        run_one_shot, run_vanilla)
+from repro.core import ProtocolConfig, SSLConfig, run_one_shot
 from repro.data import (make_image_classification, make_tabular_credit,
                         make_vfl_partition)
 from repro.models import make_cnn_extractor, make_mlp_extractor
