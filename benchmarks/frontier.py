@@ -10,22 +10,33 @@ benchmark. For each scenario in the registry selection it runs
     fedcvt     -- FedCVT-style semi-supervised cross-view baseline
 
 and writes ``BENCH_frontier.json`` rows with per-method metric (AUC or
-accuracy), ledger bytes, comm times, and wall-clock.
+accuracy), ledger bytes, comm times, wall-clock, and ``cache_misses`` —
+how many fresh compiled-session builds the method triggered (the
+engine-wide session-cache counters of DESIGN.md §9; ``jax.jit`` may still
+re-specialize a cached session per input shape, so this counts trace-level
+program builds, not individual XLA compilations). The blob-level
+``session_cache`` field carries the per-domain hit/miss totals, so a
+sweep's no-recompile behaviour across seeds/scenarios is visible in the
+artifact.
 
 CI wiring (.github/workflows/ci.yml, job ``bench-smoke``)::
 
-    python -m benchmarks.frontier --smoke --check-gate
+    REPRO_ENGINE_MODE=vmap python -m benchmarks.frontier --smoke --check-gate
 
 ``--smoke`` restricts to the registry's ``smoke``-tagged scenarios at
 CI-tractable sizes (< 3 min). ``--check-gate`` then enforces the paper's
 headline ordering on the fresh results: one-shot must dominate the
 iterative baseline on BOTH bytes (>= 100x less) and metric for every
 overlap<=64 scenario, and one-shot's ledger bytes must not regress above
-the recorded baseline (``benchmarks/frontier_baseline.json``).
+the recorded baseline (``benchmarks/frontier_baseline.json``). Under
+``REPRO_ENGINE_MODE=vmap`` it additionally requires every one-shot AND
+few-shot row to have trained on the vmapped engine path (few-shot's
+masked fixed-shape phase ⑤' no longer downgrades at ragged gate counts).
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import sys
@@ -42,6 +53,7 @@ from repro.core import (
     run_one_shot,
     run_vanilla,
 )
+from repro.engine import session_cache_stats, session_cache_stats_by_domain
 
 BASELINE_PATH = os.path.join(os.path.dirname(__file__), "frontier_baseline.json")
 
@@ -57,7 +69,8 @@ def run_scenario(spec, seed: int, smoke: bool, methods=METHODS):
         server_epochs=spec.budget("server_epochs", 30),
     )
     if spec.fewshot_threshold is not None:
-        pcfg.fewshot_threshold = spec.fewshot_threshold
+        pcfg = dataclasses.replace(pcfg,
+                                   fewshot_threshold=spec.fewshot_threshold)
     icfg = IterativeConfig(iterations=spec.budget("iterations", 300))
     runners = {
         "one_shot": lambda k: run_one_shot(
@@ -73,9 +86,14 @@ def run_scenario(spec, seed: int, smoke: bool, methods=METHODS):
             k, bundle.split, bundle.extractors, bundle.ssl_cfgs, icfg
         ),
     }
+    # the vmap fast path needs one stacked shape across parties; unequal
+    # per-party feature blocks (e.g. credit/feature-skew) legitimately take
+    # the Python fallback, so the engine-path gate must skip those rows
+    vmap_eligible = len({x.shape[1:] for x in bundle.split.aligned}) == 1
     rows = []
     for method in methods:
         t0 = time.time()
+        misses0 = session_cache_stats()["misses"]
         res = runners[method](jax.random.PRNGKey(seed))
         row = res.summary_row()
         row.update(
@@ -83,6 +101,8 @@ def run_scenario(spec, seed: int, smoke: bool, methods=METHODS):
             seed=seed,
             method=method,
             wall_s=round(time.time() - t0, 2),
+            cache_misses=session_cache_stats()["misses"] - misses0,
+            vmap_eligible=vmap_eligible,
             overlap=spec.overlap,
             num_parties=spec.num_parties,
             modality=spec.modality,
@@ -105,6 +125,21 @@ def check_gate(rows, baseline_path: str = BASELINE_PATH) -> list:
 
     with open(baseline_path) as fh:
         baseline = json.load(fh)
+
+    if os.environ.get("REPRO_ENGINE_MODE", "") == "vmap":
+        # the CI matrix forces the fast path: every protocol method whose
+        # party zoo CAN stack must actually have trained on it — including
+        # few-shot phase ⑤', whose masked sessions stack at any ragged
+        # per-party gate counts (heterogeneous feature splits are exempt:
+        # the Python fallback is the correct path there)
+        for r in rows:
+            if r["method"] in ("one_shot", "few_shot") \
+                    and r.get("vmap_eligible", False) \
+                    and r.get("engine_path") != "vmap":
+                problems.append(
+                    f"{r['scenario']}: {r['method']} trained on engine_path="
+                    f"{r.get('engine_path')!r} under REPRO_ENGINE_MODE=vmap"
+                )
 
     for name in scenario_names:
         one = by_key.get((name, "one_shot"))
@@ -167,6 +202,7 @@ def main(argv=None) -> int:
         "mode": "smoke" if args.smoke else "full",
         "seed": args.seed,
         "wall_s": round(time.time() - t0, 2),
+        "session_cache": session_cache_stats_by_domain(),
         "rows": rows,
     }
     with open(args.out, "w") as fh:

@@ -41,8 +41,11 @@ from repro.engine import iterative
 from repro.models.extractors import Model, make_classifier
 
 
-@dataclass
+@dataclass(frozen=True)
 class IterativeConfig:
+    """Frozen (use ``dataclasses.replace`` to derive variants — runner
+    signatures default to None and construct a fresh instance, so no call
+    ever observes another caller's mutations)."""
     iterations: int = 2000
     batch_size: int = 32
     client_lr: float = 0.01
@@ -98,11 +101,12 @@ def run_vanilla(
     split,
     extractors: Sequence[Model],
     ssl_cfgs: Sequence[SSLConfig],
-    cfg: IterativeConfig = IterativeConfig(),
+    cfg: Optional[IterativeConfig] = None,
     clients: Optional[List[VFLClient]] = None,
     server: Optional[VFLServer] = None,
     ledger: Optional[CommLedger] = None,
 ) -> VFLResult:
+    cfg = cfg if cfg is not None else IterativeConfig()
     ledger = ledger if ledger is not None else CommLedger()
     key, kc, ks = jax.random.split(key, 3)
     if clients is None:
@@ -138,10 +142,11 @@ def run_fedbcd(
     split,
     extractors: Sequence[Model],
     ssl_cfgs: Sequence[SSLConfig],
-    cfg: IterativeConfig = IterativeConfig(),
+    cfg: Optional[IterativeConfig] = None,
 ) -> VFLResult:
     """FedBCD-p: per round, one rep exchange then Q parallel local updates on
     the stale partial gradients (clients) / stale reps (server)."""
+    cfg = cfg if cfg is not None else IterativeConfig()
     ledger = CommLedger()
     key, kc, ks = jax.random.split(key, 3)
     clients = _build_clients(kc, split, extractors, ssl_cfgs)
@@ -227,7 +232,7 @@ def run_fedcvt(
     split,
     extractors: Sequence[Model],
     ssl_cfgs: Sequence[SSLConfig],
-    cfg: IterativeConfig = IterativeConfig(),
+    cfg: Optional[IterativeConfig] = None,
 ) -> VFLResult:
     """FedCVT-style semi-supervised baseline: vanilla iterative VFL +
     per-iteration cross-view training-set expansion. Each round, missing
@@ -235,6 +240,7 @@ def run_fedcvt(
     overlap batch and samples whose classifier confidence exceeds the
     threshold train with their pseudo labels. Runs as one engine session
     (``repro.engine.iterative.fedcvt_session``)."""
+    cfg = cfg if cfg is not None else IterativeConfig()
     ledger = CommLedger()
     key, kc, ks = jax.random.split(key, 3)
     clients = _build_clients(kc, split, extractors, ssl_cfgs)

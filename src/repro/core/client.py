@@ -62,14 +62,22 @@ def make_client(key: jax.Array, index: int, extractor: Model, num_classes: int,
 
 # ----------------------------------------------------------------- SSL loop
 def ssl_task_for(client: VFLClient, x_labeled: jnp.ndarray,
-                 y_pseudo: jnp.ndarray, x_unlabeled: jnp.ndarray) -> PartyTask:
-    """Package this client's local-SSL problem for the engine layer."""
+                 y_pseudo: jnp.ndarray, x_unlabeled: jnp.ndarray,
+                 labeled_mask: Optional[jnp.ndarray] = None,
+                 unlabeled_mask: Optional[jnp.ndarray] = None) -> PartyTask:
+    """Package this client's local-SSL problem for the engine layer.
+
+    Pass ``labeled_mask`` / ``unlabeled_mask`` for the masked fixed-shape
+    sessions of few-shot phase ⑤' (data padded to a static capacity; masked
+    rows contribute zero loss — DESIGN.md §9)."""
     return PartyTask(extractor=client.extractor, head=client.head,
                      params=PartyParams(*client.params),
                      ssl_cfg=client.ssl_cfg,
                      x_labeled=x_labeled, y_pseudo=y_pseudo,
                      x_unlabeled=x_unlabeled,
-                     feature_mean=client.feature_mean)
+                     feature_mean=client.feature_mean,
+                     labeled_mask=labeled_mask,
+                     unlabeled_mask=unlabeled_mask)
 
 
 def local_ssl_train(

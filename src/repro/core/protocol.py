@@ -6,8 +6,9 @@ CommLedger so Tab. 1's communication columns are produced by the training
 code path itself) and delegate all client-side computation to the VFL
 engine layer (``repro.engine``): gradient-clustering pseudo-labels, SDPA
 estimation, and the local-SSL sessions — vmapped into one jitted program
-when the party zoo is homogeneous, per-client Python loop otherwise
-(DESIGN.md §2).
+when the party zoo is homogeneous (including few-shot's masked
+fixed-shape phase ⑤', at any ragged per-party gate counts — DESIGN.md
+§9), per-client Python loop otherwise (DESIGN.md §2).
 """
 from __future__ import annotations
 
@@ -16,7 +17,6 @@ from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import engine
 from repro.core import clustering, estimator
@@ -29,14 +29,19 @@ from repro.data.vertical import VerticalSplit
 from repro.models.extractors import Model
 
 
-@dataclass
+@dataclass(frozen=True)
 class ProtocolConfig:
+    """Frozen (use ``dataclasses.replace`` to derive variants — runner
+    signatures default to None and construct a fresh instance, so no call
+    ever observes another caller's mutations)."""
     client_epochs: int = 20          # E_c
     server_epochs: int = 50          # E_s
     batch_size: int = 32             # B   (paper: 32)
     client_lr: float = 0.01          # η_c (paper: 0.01)
     server_lr: float = 0.01          # η_s (paper: 0.01)
     fewshot_threshold: float = 0.9   # t in Eq. (9)
+    fewshot_stochastic_gate: bool = False   # Bernoulli(p̂) sample instead of
+                                     # the paper's keep-all-gated (Eq. 9)
     grad_dp_sigma: float = 0.0       # Gaussian noise on partial grads (label-DP
                                      # style defense — paper §6 compatibility)
     kmeans_iters: int = 25
@@ -102,11 +107,10 @@ def _evaluate(server: VFLServer, clients: Sequence[VFLClient],
 
 
 def _train_clients(key, clients: Sequence[VFLClient], tasks, cfg: ProtocolConfig,
-                   diagnostics: dict, mode: Optional[str] = None) -> List[VFLClient]:
+                   diagnostics: dict) -> List[VFLClient]:
     """Run every party's local SSL through the engine; record which path ran."""
     params, metrics, vmapped = engine.train_clients_ssl(
-        key, tasks, cfg.ssl_hparams(),
-        mode=cfg.engine_mode if mode is None else mode)
+        key, tasks, cfg.ssl_hparams(), mode=cfg.engine_mode)
     diagnostics["engine_path"] = "vmap" if vmapped else "python"
     diagnostics.setdefault("ssl_metrics", []).extend(metrics)
     return [replace(c, params=p) for c, p in zip(clients, params)]
@@ -118,10 +122,11 @@ def run_one_shot(
     split: VerticalSplit,
     extractors: Sequence[Model],
     ssl_cfgs: Sequence[SSLConfig],
-    cfg: ProtocolConfig = ProtocolConfig(),
+    cfg: Optional[ProtocolConfig] = None,
     ledger: Optional[CommLedger] = None,
     clients: Optional[List[VFLClient]] = None,
 ) -> VFLResult:
+    cfg = cfg if cfg is not None else ProtocolConfig()
     ledger = ledger if ledger is not None else CommLedger()
     key, k_clients, k_srv = jax.random.split(key, 3)
     if clients is None:
@@ -185,7 +190,7 @@ def run_few_shot_finetune(
     split: VerticalSplit,
     extractors: Sequence[Model],
     ssl_cfgs: Sequence[SSLConfig],
-    cfg: ProtocolConfig = ProtocolConfig(),
+    cfg: Optional[ProtocolConfig] = None,
     finetune_iterations: int = 200,
 ) -> VFLResult:
     """Tab. 1's last row: few-shot VFL as pre-training, then end-to-end
@@ -193,6 +198,7 @@ def run_few_shot_finetune(
     sharing one ledger so the combined communication cost is visible."""
     from repro.core import baselines
 
+    cfg = cfg if cfg is not None else ProtocolConfig()
     key, k1, k2 = jax.random.split(key, 3)
     few = run_few_shot(k1, split, extractors, ssl_cfgs, cfg)
     it_cfg = baselines.IterativeConfig(iterations=finetune_iterations,
@@ -213,8 +219,9 @@ def run_few_shot(
     split: VerticalSplit,
     extractors: Sequence[Model],
     ssl_cfgs: Sequence[SSLConfig],
-    cfg: ProtocolConfig = ProtocolConfig(),
+    cfg: Optional[ProtocolConfig] = None,
 ) -> VFLResult:
+    cfg = cfg if cfg is not None else ProtocolConfig()
     key, k_one = jax.random.split(key)
     one = run_one_shot(k_one, split, extractors, ssl_cfgs, cfg)
     ledger, clients = one.ledger, one.clients
@@ -261,36 +268,39 @@ def run_few_shot(
         probs_all.append(probs)
         diagnostics["fewshot_gate_rate"].append(float(jnp.mean(probs > 0)))
 
-    # ⑤' clients expand the labeled set and re-run SSL (Alg. 2 l.11-19).
-    # The per-party labeled-set sizes now generally differ (each client
-    # keeps a different number of gated samples), so this phase runs under
-    # "auto" even when the caller forced "vmap": the fast path still
-    # engages when the gates happen to agree, and the Python fallback
-    # handles the ragged case instead of rejecting it.
-    phase_mode = "auto" if cfg.engine_mode == "vmap" else cfg.engine_mode
+    # ⑤' clients expand the labeled set and re-run SSL (Alg. 2 l.11-19) as
+    # masked fixed-shape sessions (DESIGN.md §9): every party's labeled set
+    # is the full (x_o ∘ x_u) at the static capacity N_o + N_u with a
+    # validity mask [1…1 ∘ gate], and the unlabeled set stays the full
+    # private pool with the complementary mask — so ragged per-party gate
+    # counts share one stacked shape, the vmap fast path engages under any
+    # engine_mode, and an all-gated pool is simply a zero-valid unlabeled
+    # mask (no row ever sits in both sets). The paper keeps *every* sample
+    # passing the Eq. 9 gate (p̂ > 0); fewshot_stochastic_gate restores the
+    # legacy Bernoulli(p̂) subsampling for ablations.
     tasks = []
     key, ks = jax.random.split(key)
-    for c, probs, x_o, x_u, h_u in zip(clients, probs_all, split.aligned,
-                                       split.unaligned, h_u_all):
-        key, kb = jax.random.split(key)
-        take = jax.random.bernoulli(kb, jnp.clip(probs, 0.0, 1.0))
-        idx = np.where(np.asarray(take))[0]
-        # pseudo labels for the selected unaligned samples = local model preds
-        if len(idx) > 0:
-            y_uc = c.predict(x_u[idx])
-            x_lab = jnp.concatenate([x_o, x_u[idx]], axis=0)
+    for c, probs, x_o, x_u in zip(clients, probs_all, split.aligned,
+                                  split.unaligned):
+        if cfg.fewshot_stochastic_gate:
+            key, kb = jax.random.split(key)
+            take = jax.random.bernoulli(
+                kb, jnp.clip(probs, 0.0, 1.0)).astype(jnp.float32)
         else:
-            x_lab = x_o
-        # overlap pseudo labels: recluster with current ledger gradients is
-        # unnecessary — reuse local-model predictions refined by SSL, which
-        # agree with Ŷ_o^k by construction (the local head was trained on it)
-        y_o = c.predict(x_o)
-        y_lab = jnp.concatenate([y_o, y_uc], axis=0) if len(idx) > 0 else y_o
-        keep = np.setdiff1d(np.arange(x_u.shape[0]), idx)
-        x_unl = x_u[keep] if len(keep) > 0 else x_u[:1]
-        tasks.append(ssl_task_for(c, x_lab, y_lab, x_unl))
-    clients = _train_clients(ks, clients, tasks, cfg, diagnostics,
-                             mode=phase_mode)
+            take = (probs > 0).astype(jnp.float32)
+        # pseudo labels = local model preds (for the overlap rows these agree
+        # with Ŷ_o^k by construction — the local head was trained on it; the
+        # gated-out x_u rows are masked and contribute nothing)
+        x_lab = jnp.concatenate([x_o, x_u], axis=0)
+        y_lab = jnp.concatenate([c.predict(x_o), c.predict(x_u)], axis=0)
+        lab_mask = jnp.concatenate(
+            [jnp.ones(x_o.shape[0], jnp.float32), take])
+        tasks.append(ssl_task_for(c, x_lab, y_lab, x_u,
+                                  labeled_mask=lab_mask,
+                                  unlabeled_mask=1.0 - take))
+        diagnostics.setdefault("fewshot_take_rate", []).append(
+            float(jnp.mean(take)))
+    clients = _train_clients(ks, clients, tasks, cfg, diagnostics)
 
     # ⑥' final upload + classifier re-fit
     reps = []

@@ -3,6 +3,15 @@
 Steps ②/⑥ of one-shot VFL and the auxiliary/joint classifier fitting of
 few-shot VFL (Alg. 2 lines 2-4) live here. The server owns Y_o and θ_c and
 never ships either to clients — only ∇_{H_o^k} L, C, and p̂.
+
+Classifier fits (``_fit``) run as ONE jitted ``lax.scan`` session over a
+precomputed epoch×minibatch schedule, cached in the engine-wide session
+cache (``engine.sessions``, domain ``"server_fit"``) on the semantic model
+identity + optimizer hyper-parameters. A few-shot run performs K aux fits
+plus three joint fits; a 15-scenario × seeds sweep used to re-trace a fresh
+``jax.jit`` step for every single one — now each distinct (arch, shapes,
+epochs, bs, lr) combination compiles exactly once per process
+(DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -11,10 +20,12 @@ from typing import Any, Callable, List, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import optim
 from repro.core.ssl import cross_entropy
 from repro.data.loader import epoch_batches
+from repro.engine import sessions
 from repro.models.extractors import Model, make_classifier
 
 
@@ -91,22 +102,43 @@ class VFLServer:
 
 
 def _fit(key, model: Model, params, x, y, epochs, batch_size, lr):
-    tx = optim.chain(optim.clip_by_global_norm(5.0), optim.sgd(lr, momentum=0.9))
-    opt_state = tx.init(params)
+    """Whole classifier fit as one cached, jitted ``lax.scan`` session.
 
-    @jax.jit
-    def step(params, opt_state, xb, yb):
-        def loss_fn(p):
-            return jnp.mean(cross_entropy(model.apply(p, xb), yb))
-
-        loss, grads = jax.value_and_grad(loss_fn)(params)
-        updates, opt_state = tx.update(grads, opt_state, params)
-        return optim.apply_updates(params, updates), opt_state, loss
-
+    The schedule (shuffled epochs, drop-remainder — identical batches to
+    the historical Python loop) is materialized up front; params/data/
+    schedule travel as arguments so the compiled session is reusable
+    across seeds and scenario points of equal shapes."""
     n = x.shape[0]
     bs = min(batch_size, n)
     seed0 = int(jax.random.randint(key, (), 0, 2**31 - 1))
-    for e in range(epochs):
-        for idx in epoch_batches(n, bs, seed0 + e):
-            params, opt_state, _ = step(params, opt_state, x[idx], y[idx])
-    return params
+    rows = [idx for e in range(epochs) for idx in epoch_batches(n, bs, seed0 + e)]
+    if not rows:                                 # epochs == 0 (or n < bs with
+        return params                            # drop-remainder): no-op fit
+    schedule = jnp.asarray(np.stack(rows), jnp.int32)
+
+    def build():
+        tx = optim.chain(optim.clip_by_global_norm(5.0),
+                         optim.sgd(lr, momentum=0.9))
+
+        def session(params, x, y, schedule):
+            opt_state = tx.init(params)
+
+            def body(carry, idx):
+                p, o = carry
+
+                def loss_fn(p_):
+                    return jnp.mean(cross_entropy(model.apply(p_, x[idx]),
+                                                  y[idx]))
+
+                loss, grads = jax.value_and_grad(loss_fn)(p)
+                updates, o = tx.update(grads, o, p)
+                return (optim.apply_updates(p, updates), o), loss
+
+            (params, _), _ = jax.lax.scan(body, (params, opt_state), schedule)
+            return params
+
+        return jax.jit(session, donate_argnums=(0,))
+
+    fit = sessions.cached_session(
+        "server_fit", (sessions.model_key(model), float(lr)), build)
+    return fit(params, x, y, schedule)

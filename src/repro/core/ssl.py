@@ -64,8 +64,19 @@ def ssl_loss(
     x_unlabeled: jnp.ndarray,
     cfg: SSLConfig,
     feature_mean: Optional[jnp.ndarray] = None,
+    labeled_mask: Optional[jnp.ndarray] = None,
+    unlabeled_mask: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, dict]:
-    """One minibatch of Eq. (4). Returns (loss, metrics)."""
+    """One minibatch of Eq. (4). Returns (loss, metrics).
+
+    ``labeled_mask`` / ``unlabeled_mask`` are per-row validity masks for the
+    masked fixed-shape sessions of DESIGN.md §9: few-shot phase ⑤' pads every
+    party's gated labeled set to the static capacity N_o + N_u and keeps the
+    full private pool as the unlabeled set, so padded labeled rows and
+    gated-out (or exhausted) unlabeled rows must contribute exactly zero
+    loss. ``None`` (the default) means every row is valid and reproduces the
+    unmasked objective bit-for-bit.
+    """
     k_l, k_u = jax.random.split(key)
 
     # -- supervised term on (weakly augmented) labeled data ------------------
@@ -75,7 +86,12 @@ def ssl_loss(
         xl = augment.weak_augment_tokens(k_l, x_labeled, mask_ratio=cfg.mask_ratio)
     else:
         xl = augment.weak_augment_tab(k_l, x_labeled, feature_mean, cfg.mask_ratio)
-    l_s = jnp.mean(cross_entropy(logits_fn(params, xl), y_labeled))
+    ce_l = cross_entropy(logits_fn(params, xl), y_labeled)
+    if labeled_mask is None:
+        l_s = jnp.mean(ce_l)
+    else:
+        m_l = labeled_mask.astype(ce_l.dtype)
+        l_s = jnp.sum(ce_l * m_l) / jnp.maximum(jnp.sum(m_l), 1.0)
 
     # -- unsupervised FixMatch term ------------------------------------------
     weak_u, strong_u = _augment_pair(k_u, x_unlabeled, cfg, feature_mean)
@@ -84,6 +100,8 @@ def ssl_loss(
     pseudo = jnp.argmax(q, axis=-1)
     conf = jnp.max(q, axis=-1)
     mask = (conf > cfg.confidence_threshold).astype(jnp.float32)
+    if unlabeled_mask is not None:
+        mask = mask * unlabeled_mask.astype(mask.dtype)
     ce_u = cross_entropy(logits_fn(params, strong_u), pseudo)
     l_u = jnp.sum(ce_u * mask) / jnp.maximum(jnp.sum(mask), 1.0)
 

@@ -24,10 +24,16 @@ from repro.engine.local_ssl import (
     train_party_ssl,
 )
 from repro.engine.dispatch import estimate_missing, pseudo_labels
-from repro.engine import iterative
+from repro.engine import iterative, sessions
+from repro.engine.sessions import (clear_session_cache, session_cache_stats,
+                                   session_cache_stats_by_domain)
 
 __all__ = [
     "iterative",
+    "sessions",
+    "clear_session_cache",
+    "session_cache_stats",
+    "session_cache_stats_by_domain",
     "PartyParams",
     "PartyTask",
     "Schedule",

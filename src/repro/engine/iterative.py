@@ -20,7 +20,8 @@ point. This module is the iterative counterpart of ``engine.local_ssl``
   fast path) or as a Python loop over the cached jitted step
   (``"python"``).
 
-Compiled callables are cached module-wide, keyed on the *semantic*
+Compiled callables are cached in the engine-wide session cache
+(``engine.sessions``, domain ``"iterative"``), keyed on the *semantic*
 identity of the party models (apply-fn code object + closure cells — the
 same guarantee ``local_ssl._apply_fns_match`` relies on) plus the
 optimizer hyper-parameters, so repeated sessions (another seed, another
@@ -36,7 +37,7 @@ from __future__ import annotations
 
 import os
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +45,7 @@ import numpy as np
 
 from repro import optim
 from repro.data.loader import epoch_batches
+from repro.engine import sessions
 from repro.models.extractors import Model
 
 
@@ -76,62 +78,25 @@ def resolve_mode(mode: str) -> str:
 
 
 # ----------------------------------------------------------- session cache
-_SESSION_CACHE: Dict[tuple, Any] = {}
-_CACHE_STATS = {"hits": 0, "misses": 0}
+# The cache itself lives in ``engine.sessions`` (shared with the SSL and
+# server-fit sessions); this module's historical API keeps its historical
+# *scope* — stats over the iterative sessions only, so callers that
+# interleave SSL/server fits between clear and assert see unchanged counts.
+_model_key = sessions.model_key
 
 
-def session_cache_stats() -> Dict[str, int]:
-    return dict(_CACHE_STATS)
+def session_cache_stats() -> dict:
+    return sessions.session_cache_stats("iterative")
 
 
 def clear_session_cache() -> None:
-    _SESSION_CACHE.clear()
-    _CACHE_STATS["hits"] = _CACHE_STATS["misses"] = 0
+    """Clears the whole engine-wide cache (all domains) — the conservative
+    reading of the historical contract; per-domain stats reset with it."""
+    sessions.clear_session_cache()
 
 
-def _model_key(m: Model) -> tuple:
-    """Semantic identity of a Model: apply-fn code + captured closure values.
-
-    Two ``make_mlp_extractor(rep_dim=16, hidden=(32,))`` calls return
-    distinct closures with equal keys, so sessions built for one re-serve
-    the other (their apply fns are pure and parameters travel as
-    arguments, never in the closure)."""
-    fn = m.apply
-    cells = []
-    for c in (fn.__closure__ or ()):
-        v = c.cell_contents
-        try:
-            hash(v)
-            cells.append(v)
-        except TypeError:
-            try:
-                # arrays: digest the full contents — repr() truncates large
-                # arrays, which could alias two different constants onto one
-                # cache key and silently re-serve the wrong program
-                arr = np.asarray(v)
-                if arr.dtype == object:
-                    raise TypeError("not a numeric array")
-                import hashlib
-                cells.append(("arr", arr.shape, str(arr.dtype),
-                              hashlib.sha1(arr.tobytes()).hexdigest()))
-            except Exception:
-                # un-digestable cell (dict/object closures): a fresh token
-                # guarantees a cache MISS — recompiling is safe, re-serving
-                # another model's program is not (and repr()/pointer bytes
-                # can collide across gc'd addresses)
-                cells.append(object())
-    return (getattr(fn, "__code__", None), tuple(cells), m.rep_dim)
-
-
-def _cached(key: tuple, builder: Callable[[], Any]) -> Any:
-    fn = _SESSION_CACHE.get(key)
-    if fn is None:
-        _CACHE_STATS["misses"] += 1
-        fn = builder()
-        _SESSION_CACHE[key] = fn
-    else:
-        _CACHE_STATS["hits"] += 1
-    return fn
+def _cached(key: tuple, builder: Callable[[], Callable]) -> Callable:
+    return sessions.cached_session("iterative", key, builder)
 
 
 # ------------------------------------------------------------ step factories

@@ -19,13 +19,24 @@ Two execution paths, one set of step functions (DESIGN.md §2):
                  schedule, with the stacked parameter buffers donated.
   fallback path  ``mode="python"`` — a per-client Python loop over the
                  same jitted step, for heterogeneous zoos (per-party
-                 feature dims, extractor architectures or pool sizes
-                 that cannot share one stacked shape).
+                 feature dims or extractor architectures that cannot
+                 share one stacked shape).
+
+Ragged per-party *sample counts* no longer force the fallback: a
+``PartyTask`` may carry ``labeled_mask`` / ``unlabeled_mask`` validity
+masks over data padded to a static capacity (DESIGN.md §9 — few-shot
+phase ⑤' pads every party's gated labeled set to N_o + N_u), and masked
+rows contribute exactly zero loss, so any combination of per-party gate
+counts shares one stacked shape and the vmap fast path engages.
 
 Both paths draw their minibatch schedule and per-step PRNG keys from
 ``build_schedule`` with identical per-party keys, so they are numerically
 equivalent up to batched-matmul reassociation (tests/test_engine.py pins
-this at atol 1e-5).
+this at atol 1e-5). Compiled sessions (the vmapped whole-session program
+and the fallback's per-step jit alike) are cached in the engine-wide
+session cache (``engine.sessions``, domain ``"ssl"``) keyed on semantic
+model identity + SSL/optimizer hyper-parameters, so repeated sessions
+across seeds and scenario sweeps never re-trace identical step math.
 """
 from __future__ import annotations
 
@@ -39,6 +50,7 @@ import numpy as np
 
 from repro import optim
 from repro.data.loader import epoch_batches
+from repro.engine import sessions
 from repro.models.extractors import Model
 
 if TYPE_CHECKING:   # the engine is imported by repro.core.client — keep the
@@ -64,7 +76,12 @@ class SSLHParams:
 
 @dataclass(frozen=True)
 class PartyTask:
-    """One party's local-SSL problem: model, pseudo-labeled + private data."""
+    """One party's local-SSL problem: model, pseudo-labeled + private data.
+
+    ``labeled_mask`` / ``unlabeled_mask`` (optional, per-row 0/1 validity)
+    make the task *masked fixed-shape*: ``x_labeled`` is padded to a static
+    capacity shared by every party and masked-out rows contribute zero
+    loss. ``None`` means every row is valid (the one-shot phase-④ case)."""
     extractor: Model
     head: Model
     params: PartyParams
@@ -73,6 +90,8 @@ class PartyTask:
     y_pseudo: jnp.ndarray         # (N_l,)    cluster / server pseudo-labels
     x_unlabeled: jnp.ndarray      # (N_u, …)  party-private pool
     feature_mean: Optional[jnp.ndarray] = None   # x̄ for FixMatch-tab
+    labeled_mask: Optional[jnp.ndarray] = None   # (N_l,) row validity
+    unlabeled_mask: Optional[jnp.ndarray] = None  # (N_u,) row validity
 
 
 class Schedule(NamedTuple):
@@ -93,9 +112,13 @@ def make_ssl_step_fn(extractor: Model, head: Model, ssl_cfg: "SSLConfig",
     vmap it, or close it inside a shard_map program; every caller in the
     repo gets its step from here.
 
-    Returns ``step(params, opt_state, feature_mean, key, xb_l, yb_l, xb_u)
-    -> (params, opt_state, metrics)`` where ``feature_mean`` may be None
-    for modalities that don't use it (image/token).
+    Returns ``step(params, opt_state, feature_mean, key, xb_l, yb_l, xb_u,
+    mb_l=None, mb_u=None) -> (params, opt_state, metrics)`` where
+    ``feature_mean`` may be None for modalities that don't use it
+    (image/token) and ``mb_l`` / ``mb_u`` are the minibatch rows of a
+    masked task's validity masks (None ⇒ all rows valid — the trailing
+    defaults keep every positional caller, e.g. the multi-pod schedule's
+    fori_loop, unchanged).
     """
 
     from repro.core.ssl import ssl_loss   # deferred: core.client imports us
@@ -103,10 +126,12 @@ def make_ssl_step_fn(extractor: Model, head: Model, ssl_cfg: "SSLConfig",
     def logits_fn(params: PartyParams, x):
         return head.apply(params.head, extractor.apply(params.extractor, x))
 
-    def step(params, opt_state, feature_mean, key, xb_l, yb_l, xb_u):
+    def step(params, opt_state, feature_mean, key, xb_l, yb_l, xb_u,
+             mb_l=None, mb_u=None):
         def loss_fn(p):
             return ssl_loss(logits_fn, p, key, xb_l, yb_l, xb_u, ssl_cfg,
-                            feature_mean)
+                            feature_mean, labeled_mask=mb_l,
+                            unlabeled_mask=mb_u)
 
         (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
         updates, opt_state = tx.update(grads, opt_state, params)
@@ -150,22 +175,36 @@ def build_schedule(key: jax.Array, n_labeled: int, n_unlabeled: int,
 
 
 # ------------------------------------------------------- fallback: Python loop
+def _optimizer_key(hp: SSLHParams) -> tuple:
+    """The hp fields the step math closes over (epochs/batch sizes only
+    shape the schedule, which travels as arguments)."""
+    return (hp.learning_rate, hp.momentum, hp.grad_clip)
+
+
 def train_party_ssl(key: jax.Array, task: PartyTask, hp: SSLHParams
                     ) -> Tuple[PartyParams, dict]:
-    """One party's SSL session as a Python loop over the jitted step."""
+    """One party's SSL session as a Python loop over the cached jitted step."""
     tx = make_ssl_optimizer(hp)
-    step = jax.jit(make_ssl_step_fn(task.extractor, task.head, task.ssl_cfg, tx))
+    step = sessions.cached_session(
+        "ssl",
+        ("step", sessions.model_key(task.extractor),
+         sessions.model_key(task.head), task.ssl_cfg, _optimizer_key(hp)),
+        lambda: jax.jit(make_ssl_step_fn(task.extractor, task.head,
+                                         task.ssl_cfg, tx)))
     sched = build_schedule(key, task.x_labeled.shape[0],
                            task.x_unlabeled.shape[0], hp)
     params, opt_state = task.params, tx.init(task.params)
     idx_l = np.asarray(sched.idx_labeled)
     idx_u = np.asarray(sched.idx_unlabeled)
+    m_l, m_u = task.labeled_mask, task.unlabeled_mask
     metrics: dict = {}
     for i in range(idx_l.shape[0]):
         params, opt_state, m = step(
             params, opt_state, task.feature_mean, sched.step_keys[i],
             task.x_labeled[idx_l[i]], task.y_pseudo[idx_l[i]],
-            task.x_unlabeled[idx_u[i]])
+            task.x_unlabeled[idx_u[i]],
+            None if m_l is None else m_l[idx_l[i]],
+            None if m_u is None else m_u[idx_u[i]])
         metrics = m
     return params, {k: float(v) for k, v in metrics.items()}
 
@@ -201,8 +240,11 @@ def _apply_fns_match(a: Model, b: Model) -> bool:
 def tasks_are_homogeneous(tasks: Sequence[PartyTask]) -> bool:
     """True when every party's params/data/config share one stacked shape
     AND the extractor/head forward functions match — the precondition of
-    the vmap fast path. Heterogeneous zoos (per-party feature dims,
-    architectures, or labeled-set sizes) take the Python fallback."""
+    the vmap fast path. Heterogeneous zoos (per-party feature dims or
+    architectures) take the Python fallback. Ragged per-party *gate
+    counts* are NOT heterogeneous: masked tasks pad to a shared static
+    capacity (DESIGN.md §9), so their shapes — data and masks — match and
+    the fast path engages at any combination of valid-row counts."""
     t0 = tasks[0]
     ref = jax.tree_util.tree_structure(t0.params)
     ref_shapes = [(l.shape, l.dtype) for l in jax.tree_util.tree_leaves(t0.params)]
@@ -220,11 +262,12 @@ def tasks_are_homogeneous(tasks: Sequence[PartyTask]) -> bool:
             return False
         if t.ssl_cfg != t0.ssl_cfg:
             return False
-        if (t.feature_mean is None) != (t0.feature_mean is None):
-            return False
-        if (t.feature_mean is not None
-                and t.feature_mean.shape != t0.feature_mean.shape):
-            return False
+        for attr in ("feature_mean", "labeled_mask", "unlabeled_mask"):
+            a, a0 = getattr(t, attr), getattr(t0, attr)
+            if (a is None) != (a0 is None):
+                return False
+            if a is not None and a.shape != a0.shape:
+                return False
     return True
 
 
@@ -233,11 +276,15 @@ def train_parties_ssl_vmapped(keys: Sequence[jax.Array],
                               ) -> Tuple[List[PartyParams], List[dict]]:
     """All parties' SSL sessions as ONE jitted program: ``vmap`` over the
     stacked client axis, ``lax.scan`` over the flattened epoch×batch
-    schedule, stacked parameter buffers donated to the compiled call."""
+    schedule, stacked parameter buffers donated to the compiled call.
+
+    The compiled session is cached (``engine.sessions``, domain ``"ssl"``)
+    on semantic model identity + SSLConfig + optimizer hyper-parameters;
+    params, data, masks, and the schedule all travel as arguments, so a
+    sweep's later seeds/scenario points of equal shapes re-serve it."""
     t0 = tasks[0]
     k = len(tasks)
     tx = make_ssl_optimizer(hp)
-    step = make_ssl_step_fn(t0.extractor, t0.head, t0.ssl_cfg, tx)
 
     scheds = [build_schedule(kk, t.x_labeled.shape[0], t.x_unlabeled.shape[0], hp)
               for kk, t in zip(keys, tasks)]
@@ -252,27 +299,42 @@ def train_parties_ssl_vmapped(keys: Sequence[jax.Array],
     step_keys = jnp.stack([s.step_keys for s in scheds])
     fm = (None if t0.feature_mean is None
           else jnp.stack([t.feature_mean for t in tasks]))
+    m_l = (None if t0.labeled_mask is None
+           else jnp.stack([t.labeled_mask for t in tasks]))
+    m_u = (None if t0.unlabeled_mask is None
+           else jnp.stack([t.unlabeled_mask for t in tasks]))
 
-    def one_party(params, feature_mean, x_lab, y_lab, x_unl, i_l, i_u, keys_s):
-        opt_state = tx.init(params)
+    def build():
+        step = make_ssl_step_fn(t0.extractor, t0.head, t0.ssl_cfg, tx)
 
-        def body(carry, inp):
-            p, o = carry
-            il, iu, kk = inp
-            p, o, m = step(p, o, feature_mean, kk,
-                           x_lab[il], y_lab[il], x_unl[iu])
-            return (p, o), m
+        def one_party(params, feature_mean, x_lab, y_lab, x_unl,
+                      mask_lab, mask_unl, i_l, i_u, keys_s):
+            opt_state = tx.init(params)
 
-        (params, _), ms = jax.lax.scan(body, (params, opt_state),
-                                       (i_l, i_u, keys_s))
-        last = jax.tree_util.tree_map(lambda a: a[-1], ms)
-        return params, last
+            def body(carry, inp):
+                p, o = carry
+                il, iu, kk = inp
+                p, o, m = step(p, o, feature_mean, kk,
+                               x_lab[il], y_lab[il], x_unl[iu],
+                               None if mask_lab is None else mask_lab[il],
+                               None if mask_unl is None else mask_unl[iu])
+                return (p, o), m
 
-    fn = jax.jit(
-        jax.vmap(one_party,
-                 in_axes=(0, None if fm is None else 0, 0, 0, 0, 0, 0, 0)),
-        donate_argnums=(0,))
-    new_params, metrics = fn(stacked_params, fm, x_l, y_l, x_u,
+            (params, _), ms = jax.lax.scan(body, (params, opt_state),
+                                           (i_l, i_u, keys_s))
+            last = jax.tree_util.tree_map(lambda a: a[-1], ms)
+            return params, last
+
+        axes = tuple(None if arg is None else 0
+                     for arg in (0, fm, 0, 0, 0, m_l, m_u, 0, 0, 0))
+        return jax.jit(jax.vmap(one_party, in_axes=axes), donate_argnums=(0,))
+
+    fn = sessions.cached_session(
+        "ssl",
+        ("vmap", sessions.model_key(t0.extractor), sessions.model_key(t0.head),
+         t0.ssl_cfg, _optimizer_key(hp), fm is None, m_l is None, m_u is None),
+        build)
+    new_params, metrics = fn(stacked_params, fm, x_l, y_l, x_u, m_l, m_u,
                              idx_l, idx_u, step_keys)
     params_list = _unstack(new_params, k)
     metrics_list = [{name: float(v[i]) for name, v in metrics.items()}

@@ -49,7 +49,6 @@ def main() -> None:
     # prefill by stepping the decoder over the prompt (cache-exact; a bulk
     # prefill_fn path exists for throughput benchmarking)
     t0 = time.time()
-    tok = prompt[:, :1]
     for t in range(args.prompt_len):
         batch = {"token": prompt[:, t:t + 1],
                  "pos": jnp.full((b, 1), t, jnp.int32)}

@@ -132,14 +132,16 @@ def test_homogeneity_checks_forward_fn(homo_split):
 
 
 def test_few_shot_with_vmap_mode(homo_split):
-    """engine_mode='vmap' must survive the whole few-shot run: phase ⑤''s
-    ragged gated labeled sets downgrade to auto instead of raising."""
+    """engine_mode='vmap' must survive the whole few-shot run ON the fast
+    path: phase ⑤''s masked fixed-shape sessions stack at any ragged
+    per-party gate counts (DESIGN.md §9) — no downgrade, no raise."""
     from repro.core import run_few_shot
 
     ext = [make_mlp_extractor(rep_dim=8, hidden=(16,)) for _ in range(2)]
     ssl = [SSLConfig(modality="tabular")] * 2
     cfg = ProtocolConfig(client_epochs=2, server_epochs=3, engine_mode="vmap")
     res = run_few_shot(jax.random.PRNGKey(1), homo_split, ext, ssl, cfg)
+    assert res.diagnostics["engine_path"] == "vmap"
     assert res.ledger.comm_times() == 5
     assert res.metric > 0.5
 
