@@ -1,7 +1,8 @@
 """The paper's contribution: one-shot / few-shot VFL (Sun et al., 2023)."""
 from repro.core.comm import CommLedger
 from repro.core.protocol import (ProtocolConfig, VFLResult, run_few_shot,
-                                 run_few_shot_finetune, run_one_shot)
+                                 run_few_shot_finetune, run_one_shot,
+                                 run_seeds)
 from repro.core.baselines import IterativeConfig, run_fedbcd, run_fedcvt, run_vanilla
 from repro.core.ssl import SSLConfig
 
@@ -14,6 +15,7 @@ __all__ = [
     "run_one_shot",
     "run_few_shot",
     "run_few_shot_finetune",
+    "run_seeds",
     "run_vanilla",
     "run_fedbcd",
     "run_fedcvt",

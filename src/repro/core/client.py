@@ -53,7 +53,8 @@ def make_client(key: jax.Array, index: int, extractor: Model, num_classes: int,
     reps = extractor.apply(e_params, sample_input[:1])
     h_params = head.init(k_h, reps)
     fm = None
-    if local_data_for_mean is not None and local_data_for_mean.ndim == 2:
+    if (local_data_for_mean is not None and local_data_for_mean.ndim == 2
+            and local_data_for_mean.shape[0] > 0):   # empty pool ⇒ NaN mean
         fm = jnp.mean(local_data_for_mean, axis=0)
     return VFLClient(index=index, extractor=extractor, head=head,
                      params=ClientParams(e_params, h_params),

@@ -9,6 +9,16 @@ estimation, and the local-SSL sessions — vmapped into one jitted program
 when the party zoo is homogeneous (including few-shot's masked
 fixed-shape phase ⑤', at any ragged per-party gate counts — DESIGN.md
 §9), per-client Python loop otherwise (DESIGN.md §2).
+
+Both protocols are implemented once, *seed-batched* (DESIGN.md §10): the
+internal ``_one_shot_seeds`` / ``_few_shot_seeds`` drive S seeds of one
+scenario point through the exchanges together, folding the heavy compute
+(S·K local-SSL sessions, S·K k-means runs, S server fits) into stacked
+compiled programs while reproducing each seed's exact single-seed PRNG
+stream host-side. The public single-seed runners are the S = 1 case of the
+same code; ``run_seeds`` is the multi-seed entry point. Communication is a
+function of shapes only, so the ledger is produced host-side once and
+asserted byte-identical across seeds.
 """
 from __future__ import annotations
 
@@ -21,9 +31,11 @@ import jax.numpy as jnp
 from repro import engine
 from repro.core import clustering, estimator
 from repro.core.client import VFLClient, make_client, ssl_task_for
-from repro.core.comm import CommLedger
+from repro.core.comm import CommLedger, nbytes
 from repro.core.metrics import accuracy, binary_auc
-from repro.core.server import VFLServer, concat_reps
+from repro.core.server import (VFLServer, concat_reps,
+                               fit_aux_classifiers_seeds,
+                               train_classifier_seeds)
 from repro.core.ssl import SSLConfig
 from repro.data.vertical import VerticalSplit
 from repro.models.extractors import Model
@@ -42,6 +54,10 @@ class ProtocolConfig:
     fewshot_threshold: float = 0.9   # t in Eq. (9)
     fewshot_stochastic_gate: bool = False   # Bernoulli(p̂) sample instead of
                                      # the paper's keep-all-gated (Eq. 9)
+    fewshot_relabel_overlap: bool = False   # legacy phase-⑤' behavior: re-
+                                     # predict the overlap rows with the
+                                     # local head instead of reusing the
+                                     # step-③ cluster pseudo-labels Ŷ_o^k
     grad_dp_sigma: float = 0.0       # Gaussian noise on partial grads (label-DP
                                      # style defense — paper §6 compatibility)
     kmeans_iters: int = 25
@@ -87,7 +103,12 @@ def _build_clients(key, split: VerticalSplit, extractors: Sequence[Model],
     clients = []
     for k_idx, (ext, cfg) in enumerate(zip(extractors, ssl_cfgs)):
         key, kc = jax.random.split(key)
+        # x̄ for the tabular augmentations (Eq. 5-6) comes from the party's
+        # local rows: the private pool, or — for a full-overlap party whose
+        # pool is empty — its aligned feature block (also party-local data)
         local_pool = split.unaligned[k_idx]
+        if local_pool.ndim == 2 and local_pool.shape[0] == 0:
+            local_pool = split.aligned[k_idx]
         clients.append(make_client(
             kc, k_idx, ext, split.num_classes,
             sample_input=split.aligned[k_idx][:2],
@@ -106,17 +127,166 @@ def _evaluate(server: VFLServer, clients: Sequence[VFLClient],
     return "accuracy", accuracy(logits, split.test_labels)
 
 
-def _train_clients(key, clients: Sequence[VFLClient], tasks, cfg: ProtocolConfig,
-                   diagnostics: dict) -> List[VFLClient]:
-    """Run every party's local SSL through the engine; record which path ran."""
-    params, metrics, vmapped = engine.train_clients_ssl(
-        key, tasks, cfg.ssl_hparams(), mode=cfg.engine_mode)
-    diagnostics["engine_path"] = "vmap" if vmapped else "python"
-    diagnostics.setdefault("ssl_metrics", []).extend(metrics)
-    return [replace(c, params=p) for c, p in zip(clients, params)]
+def _safe_mean(x) -> float:
+    """Host-side mean that treats an empty array (e.g. a full-overlap
+    party's zero-row pool) as rate 0 instead of NaN."""
+    return float(jnp.mean(x)) if x.size else 0.0
+
+
+def _log_seeds(ledger: CommLedger, party: int, direction: str, tag: str,
+               payloads: Sequence, round: int) -> None:
+    """Log ONE event for S per-seed payloads of one transfer: communication
+    is a function of shapes, so the seeds must agree byte-for-byte — the
+    seed-batched runs assert it at every exchange."""
+    sizes = {nbytes(p) for p in payloads}
+    if len(sizes) != 1:
+        raise ValueError(
+            f"seed-batched run broke ledger byte-identity for {tag!r}: "
+            f"per-seed payload bytes {sorted(sizes)}")
+    ledger.log_bytes(party, direction, tag, sizes.pop(), round=round)
+
+
+def fewshot_phase5_labels(client: VFLClient, x_o: jnp.ndarray,
+                          x_u: jnp.ndarray, pseudo_overlap: jnp.ndarray,
+                          relabel_overlap: bool = False) -> jnp.ndarray:
+    """Labels of the padded phase-⑤' labeled set ``x_o ∘ x_u`` (Alg. 2
+    l.11-19): the overlap rows reuse the step-③ gradient-cluster
+    pseudo-labels Ŷ_o^k — the local head may drift off them during SSL, so
+    re-predicting is NOT guaranteed to agree — and the pool rows take the
+    local model's predictions (their contribution is masked by the Eq. 9
+    gate). ``relabel_overlap`` restores the legacy re-prediction of the
+    overlap rows for ablations."""
+    y_o = (client.predict(x_o) if relabel_overlap
+           else pseudo_overlap.astype(jnp.int32))
+    return jnp.concatenate([y_o, client.predict(x_u)], axis=0)
 
 
 # ------------------------------------------------------------- one-shot VFL
+def _one_shot_seeds(
+    keys: Sequence[jax.Array],
+    splits: Sequence[VerticalSplit],
+    extractors: Sequence[Sequence[Model]],
+    ssl_cfgs: Sequence[Sequence[SSLConfig]],
+    cfg: Optional[ProtocolConfig] = None,
+    ledger: Optional[CommLedger] = None,
+    clients_per_seed: Optional[Sequence[Optional[List[VFLClient]]]] = None,
+    final_reps_out: Optional[list] = None,
+) -> List[VFLResult]:
+    """Alg. 1 over S seeds at once. Per-seed PRNG streams are split exactly
+    like the historical single-seed runner's (S = 1 *is* the single-seed
+    runner); the heavy stages — step-③ k-means, step-④ local SSL, step-⑥
+    classifier fit — execute seed-batched (DESIGN.md §10). All results
+    share ``ledger``; multi-seed callers copy it per result.
+    ``final_reps_out`` (if given) receives the step-⑤ refreshed overlap
+    reps per seed, so few-shot's ①' needn't re-extract them."""
+    cfg = cfg if cfg is not None else ProtocolConfig()
+    ledger = ledger if ledger is not None else CommLedger()
+    num_seeds = len(keys)
+    num_parties = len(splits[0].aligned)
+
+    st_keys, k_srvs, clients_all, servers = [], [], [], []
+    for s in range(num_seeds):
+        key, k_clients, k_srv = jax.random.split(keys[s], 3)
+        given = clients_per_seed[s] if clients_per_seed is not None else None
+        clients = (given if given is not None else
+                   _build_clients(k_clients, splits[s], extractors[s],
+                                  ssl_cfgs[s]))
+        st_keys.append(key)
+        k_srvs.append(k_srv)
+        clients_all.append(clients)
+        servers.append(VFLServer(num_classes=splits[s].num_classes))
+
+    # ① clients upload overlap representations
+    reps_all = [[c.extract(x_o).astype(cfg.rep_dtype)
+                 for c, x_o in zip(clients_all[s], splits[s].aligned)]
+                for s in range(num_seeds)]
+    r1 = ledger.next_round()
+    for k in range(num_parties):
+        _log_seeds(ledger, k, "up", "reps_overlap",
+                   [reps_all[s][k] for s in range(num_seeds)], r1)
+
+    # ② server computes and sends partial gradients (+ class count C);
+    # optional label-DP-style Gaussian noise (the paper's §6 notes such
+    # defenses compose with the protocol — grad_dp_sigma exercises that)
+    grads_all = []
+    for s in range(num_seeds):
+        st_keys[s], kg = jax.random.split(st_keys[s])
+        grads = servers[s].partial_gradients(kg, reps_all[s],
+                                             splits[s].labels)
+        if cfg.grad_dp_sigma > 0:
+            noised = []
+            for g in grads:
+                st_keys[s], kn = jax.random.split(st_keys[s])
+                scale = cfg.grad_dp_sigma * jnp.std(g)
+                noised.append(g + scale * jax.random.normal(kn, g.shape))
+            grads = noised
+        grads_all.append(grads)
+    r2 = ledger.next_round()
+    for k in range(num_parties):
+        _log_seeds(ledger, k, "down", "partial_grads",
+                   [grads_all[s][k] for s in range(num_seeds)], r2)
+
+    # ③ gradient clustering → pseudo labels;  ④ local SSL — both engine-
+    # side and seed-batched: the S·K gradient matrices cluster in one
+    # vmapped k-means, the S·K SSL sessions fold into one stacked program
+    diags = [{"kmeans_purity": [], "ssl_metrics": []}
+             for _ in range(num_seeds)]
+    kss = []
+    flat_kmeans_keys, flat_grads = [], []
+    for s in range(num_seeds):
+        st_keys[s], kk, ks = jax.random.split(st_keys[s], 3)
+        kss.append(ks)
+        flat_kmeans_keys.extend(jax.random.fold_in(kk, c.index)
+                                for c in clients_all[s])
+        flat_grads.extend(grads_all[s])
+    flat_pseudo = engine.pseudo_labels_seeds(
+        flat_kmeans_keys, flat_grads, splits[0].num_classes,
+        cfg.kmeans_iters, use_kernels=cfg.use_kernels)
+    pseudo_all = engine.unflatten_seed_results(flat_pseudo, num_seeds,
+                                               num_parties)
+    tasks_per_seed = []
+    for s in range(num_seeds):
+        tasks = []
+        for c, pseudo, x_o, x_u in zip(clients_all[s], pseudo_all[s],
+                                       splits[s].aligned,
+                                       splits[s].unaligned):
+            diags[s]["kmeans_purity"].append(clustering.cluster_purity(
+                pseudo, splits[s].labels, splits[s].num_classes))
+            tasks.append(ssl_task_for(c, x_o, pseudo, x_u))
+        diags[s]["pseudo_labels"] = pseudo_all[s]   # Ŷ_o^k — few-shot ⑤'
+        tasks_per_seed.append(tasks)                # reuses them (Alg. 2)
+    params_all, metrics_all, paths = engine.train_clients_ssl_seeds(
+        kss, tasks_per_seed, cfg.ssl_hparams(), mode=cfg.engine_mode)
+    for s in range(num_seeds):
+        diags[s]["engine_path"] = paths[s]
+        diags[s]["ssl_metrics"].extend(metrics_all[s])
+        clients_all[s] = [replace(c, params=p)
+                          for c, p in zip(clients_all[s], params_all[s])]
+
+    # ⑤ upload refreshed reps;  ⑥ server trains classifier (seed-batched)
+    reps_all = [[c.extract(x_o).astype(cfg.rep_dtype)
+                 for c, x_o in zip(clients_all[s], splits[s].aligned)]
+                for s in range(num_seeds)]
+    r3 = ledger.next_round()
+    for k in range(num_parties):
+        _log_seeds(ledger, k, "up", "reps_overlap_refreshed",
+                   [reps_all[s][k] for s in range(num_seeds)], r3)
+    train_classifier_seeds(k_srvs, servers, reps_all,
+                           [sp.labels for sp in splits],
+                           epochs=cfg.server_epochs,
+                           batch_size=cfg.batch_size,
+                           learning_rate=cfg.server_lr)
+    if final_reps_out is not None:
+        final_reps_out.extend(reps_all)
+
+    results = []
+    for s in range(num_seeds):
+        name, metric = _evaluate(servers[s], clients_all[s], splits[s])
+        results.append(VFLResult(name, metric, ledger, clients_all[s],
+                                 servers[s], diags[s]))
+    return results
+
+
 def run_one_shot(
     key: jax.Array,
     split: VerticalSplit,
@@ -126,63 +296,8 @@ def run_one_shot(
     ledger: Optional[CommLedger] = None,
     clients: Optional[List[VFLClient]] = None,
 ) -> VFLResult:
-    cfg = cfg if cfg is not None else ProtocolConfig()
-    ledger = ledger if ledger is not None else CommLedger()
-    key, k_clients, k_srv = jax.random.split(key, 3)
-    if clients is None:
-        clients = _build_clients(k_clients, split, extractors, ssl_cfgs)
-    server = VFLServer(num_classes=split.num_classes)
-
-    # ① clients upload overlap representations
-    reps = []
-    r1 = ledger.next_round()
-    for c, x_o in zip(clients, split.aligned):
-        h = c.extract(x_o).astype(cfg.rep_dtype)
-        ledger.log(c.index, "up", "reps_overlap", h, round=r1)
-        reps.append(h)
-
-    # ② server computes and sends partial gradients (+ class count C);
-    # optional label-DP-style Gaussian noise (the paper's §6 notes such
-    # defenses compose with the protocol — grad_dp_sigma exercises that)
-    key, kg = jax.random.split(key)
-    grads = server.partial_gradients(kg, reps, split.labels)
-    if cfg.grad_dp_sigma > 0:
-        noised = []
-        for g in grads:
-            key, kn = jax.random.split(key)
-            scale = cfg.grad_dp_sigma * jnp.std(g)
-            noised.append(g + scale * jax.random.normal(kn, g.shape))
-        grads = noised
-    r2 = ledger.next_round()
-    for c, g in zip(clients, grads):
-        ledger.log(c.index, "down", "partial_grads", g, round=r2)
-
-    # ③ gradient clustering → pseudo labels;  ④ local SSL — both engine-side
-    diagnostics = {"kmeans_purity": [], "ssl_metrics": []}
-    key, kk, ks = jax.random.split(key, 3)
-    tasks = []
-    for c, g, x_o, x_u in zip(clients, grads, split.aligned, split.unaligned):
-        pseudo = engine.pseudo_labels(
-            jax.random.fold_in(kk, c.index), g, split.num_classes,
-            cfg.kmeans_iters, use_kernels=cfg.use_kernels)
-        diagnostics["kmeans_purity"].append(
-            clustering.cluster_purity(pseudo, split.labels, split.num_classes))
-        tasks.append(ssl_task_for(c, x_o, pseudo, x_u))
-    clients = _train_clients(ks, clients, tasks, cfg, diagnostics)
-
-    # ⑤ upload refreshed reps;  ⑥ server trains classifier
-    reps = []
-    r3 = ledger.next_round()
-    for c, x_o in zip(clients, split.aligned):
-        h = c.extract(x_o).astype(cfg.rep_dtype)
-        ledger.log(c.index, "up", "reps_overlap_refreshed", h, round=r3)
-        reps.append(h)
-    server.train_classifier(k_srv, reps, split.labels,
-                            epochs=cfg.server_epochs, batch_size=cfg.batch_size,
-                            learning_rate=cfg.server_lr)
-
-    name, metric = _evaluate(server, clients, split)
-    return VFLResult(name, metric, ledger, clients, server, diagnostics)
+    return _one_shot_seeds([key], [split], [extractors], [ssl_cfgs], cfg,
+                           ledger=ledger, clients_per_seed=[clients])[0]
 
 
 def run_few_shot_finetune(
@@ -214,59 +329,87 @@ def run_few_shot_finetune(
 
 
 # ------------------------------------------------------------- few-shot VFL
-def run_few_shot(
-    key: jax.Array,
-    split: VerticalSplit,
-    extractors: Sequence[Model],
-    ssl_cfgs: Sequence[SSLConfig],
+def _few_shot_seeds(
+    keys: Sequence[jax.Array],
+    splits: Sequence[VerticalSplit],
+    extractors: Sequence[Sequence[Model]],
+    ssl_cfgs: Sequence[Sequence[SSLConfig]],
     cfg: Optional[ProtocolConfig] = None,
-) -> VFLResult:
+    ledger: Optional[CommLedger] = None,
+) -> List[VFLResult]:
+    """Alg. 2 over S seeds at once, continuing from the seed-batched
+    one-shot pass: the aux-classifier fits, the masked phase-⑤' SSL
+    sessions, and the final classifier re-fit all execute seed-batched;
+    the SDPA estimation and Eq. 8-9 gating are cheap host-side per-seed
+    passes with the exact single-seed key discipline."""
     cfg = cfg if cfg is not None else ProtocolConfig()
-    key, k_one = jax.random.split(key)
-    one = run_one_shot(k_one, split, extractors, ssl_cfgs, cfg)
-    ledger, clients = one.ledger, one.clients
-    server = one.server
-    diagnostics = dict(one.diagnostics)
+    ledger = ledger if ledger is not None else CommLedger()
+    num_seeds = len(keys)
+    num_parties = len(splits[0].aligned)
+
+    st_keys, k_ones = [], []
+    for s in range(num_seeds):
+        key, k_one = jax.random.split(keys[s])
+        st_keys.append(key)
+        k_ones.append(k_one)
+    h_o_all: list = []
+    ones = _one_shot_seeds(k_ones, splits, extractors, ssl_cfgs, cfg,
+                           ledger=ledger, final_reps_out=h_o_all)
+    clients_all = [r.clients for r in ones]
+    servers = [r.server for r in ones]
+    diags = [dict(r.diagnostics) for r in ones]
 
     # ①' clients upload unaligned reps alongside the refreshed overlap reps
-    # (same round as ⑤ above — the ledger tags it separately but the event
-    # count matches the paper's 5 comm-times; see comm.py)
-    h_o_all = [c.extract(x).astype(cfg.rep_dtype) for c, x in zip(clients, split.aligned)]
-    h_u_all = []
+    # (h_o_all IS the step-⑤ upload — same params, same dtype — and shares
+    # its round: the ledger tags the unaligned payload separately but the
+    # event count matches the paper's 5 comm-times; see comm.py)
+    h_u_all = [[c.extract(x).astype(cfg.rep_dtype)
+                for c, x in zip(clients_all[s], splits[s].unaligned)]
+               for s in range(num_seeds)]
     r3 = max(e.round for e in ledger.events)   # bundled with the ⑤ upload
-    for c, x_u in zip(clients, split.unaligned):
-        h_u = c.extract(x_u).astype(cfg.rep_dtype)
-        ledger.log(c.index, "up", "reps_unaligned", h_u, round=r3)
-        h_u_all.append(h_u)
+    for k in range(num_parties):
+        _log_seeds(ledger, k, "up", "reps_unaligned",
+                   [h_u_all[s][k] for s in range(num_seeds)], r3)
 
-    # ②' server fits aux classifiers f_c^k and reuses the joint f_c
-    key, ka = jax.random.split(key)
-    server.fit_aux_classifiers(ka, h_o_all, split.labels,
-                               epochs=cfg.server_epochs, batch_size=cfg.batch_size,
-                               learning_rate=cfg.server_lr)
+    # ②' server fits aux classifiers f_c^k (seed-batched) and reuses the
+    # joint f_c
+    kas = []
+    for s in range(num_seeds):
+        st_keys[s], ka = jax.random.split(st_keys[s])
+        kas.append(ka)
+    fit_aux_classifiers_seeds(kas, servers, h_o_all,
+                              [sp.labels for sp in splits],
+                              epochs=cfg.server_epochs,
+                              batch_size=cfg.batch_size,
+                              learning_rate=cfg.server_lr)
 
     # ③' SDPA estimation + Eq. 8-9 gating;  ④' download p̂
-    probs_all = []
-    diagnostics["fewshot_gate_rate"] = []
+    probs_all = [[] for _ in range(num_seeds)]
+    for s in range(num_seeds):
+        diags[s]["fewshot_gate_rate"] = []
     r4 = ledger.next_round()
-    for k_idx, (c, h_u) in enumerate(zip(clients, h_u_all)):
-        est = engine.estimate_missing(h_u, h_o_all, k_idx,
-                                      use_kernels=cfg.use_kernels)
-        parts = []
-        ei = 0
-        for j in range(len(clients)):
-            if j == k_idx:
-                parts.append(h_u)
-            else:
-                parts.append(est[ei])
-                ei += 1
-        full_rep = concat_reps(parts)
-        probs = estimator.infer_prob(server.aux_logits_fn(k_idx),
-                                     server.joint_logits_fn(),
-                                     h_u, full_rep, cfg.fewshot_threshold)
-        ledger.log(c.index, "down", "pseudo_label_probs", probs, round=r4)
-        probs_all.append(probs)
-        diagnostics["fewshot_gate_rate"].append(float(jnp.mean(probs > 0)))
+    for k_idx in range(num_parties):
+        for s in range(num_seeds):
+            h_u = h_u_all[s][k_idx]
+            est = engine.estimate_missing(h_u, h_o_all[s], k_idx,
+                                          use_kernels=cfg.use_kernels)
+            parts = []
+            ei = 0
+            for j in range(num_parties):
+                if j == k_idx:
+                    parts.append(h_u)
+                else:
+                    parts.append(est[ei])
+                    ei += 1
+            full_rep = concat_reps(parts)
+            probs = estimator.infer_prob(servers[s].aux_logits_fn(k_idx),
+                                         servers[s].joint_logits_fn(),
+                                         h_u, full_rep,
+                                         cfg.fewshot_threshold)
+            probs_all[s].append(probs)
+            diags[s]["fewshot_gate_rate"].append(_safe_mean(probs > 0))
+        _log_seeds(ledger, k_idx, "down", "pseudo_label_probs",
+                   [probs_all[s][k_idx] for s in range(num_seeds)], r4)
 
     # ⑤' clients expand the labeled set and re-run SSL (Alg. 2 l.11-19) as
     # masked fixed-shape sessions (DESIGN.md §9): every party's labeled set
@@ -277,42 +420,167 @@ def run_few_shot(
     # engine_mode, and an all-gated pool is simply a zero-valid unlabeled
     # mask (no row ever sits in both sets). The paper keeps *every* sample
     # passing the Eq. 9 gate (p̂ > 0); fewshot_stochastic_gate restores the
-    # legacy Bernoulli(p̂) subsampling for ablations.
-    tasks = []
-    key, ks = jax.random.split(key)
-    for c, probs, x_o, x_u in zip(clients, probs_all, split.aligned,
-                                  split.unaligned):
-        if cfg.fewshot_stochastic_gate:
-            key, kb = jax.random.split(key)
-            take = jax.random.bernoulli(
-                kb, jnp.clip(probs, 0.0, 1.0)).astype(jnp.float32)
-        else:
-            take = (probs > 0).astype(jnp.float32)
-        # pseudo labels = local model preds (for the overlap rows these agree
-        # with Ŷ_o^k by construction — the local head was trained on it; the
-        # gated-out x_u rows are masked and contribute nothing)
-        x_lab = jnp.concatenate([x_o, x_u], axis=0)
-        y_lab = jnp.concatenate([c.predict(x_o), c.predict(x_u)], axis=0)
-        lab_mask = jnp.concatenate(
-            [jnp.ones(x_o.shape[0], jnp.float32), take])
-        tasks.append(ssl_task_for(c, x_lab, y_lab, x_u,
-                                  labeled_mask=lab_mask,
-                                  unlabeled_mask=1.0 - take))
-        diagnostics.setdefault("fewshot_take_rate", []).append(
-            float(jnp.mean(take)))
-    clients = _train_clients(ks, clients, tasks, cfg, diagnostics)
+    # legacy Bernoulli(p̂) subsampling for ablations. Overlap rows keep the
+    # step-③ cluster pseudo-labels Ŷ_o^k (``fewshot_phase5_labels``).
+    kss = []
+    for s in range(num_seeds):
+        st_keys[s], ks = jax.random.split(st_keys[s])
+        kss.append(ks)
+    tasks_per_seed = []
+    for s in range(num_seeds):
+        tasks = []
+        for c, probs, pseudo, x_o, x_u in zip(
+                clients_all[s], probs_all[s], diags[s]["pseudo_labels"],
+                splits[s].aligned, splits[s].unaligned):
+            if cfg.fewshot_stochastic_gate:
+                st_keys[s], kb = jax.random.split(st_keys[s])
+                take = jax.random.bernoulli(
+                    kb, jnp.clip(probs, 0.0, 1.0)).astype(jnp.float32)
+            else:
+                take = (probs > 0).astype(jnp.float32)
+            x_lab = jnp.concatenate([x_o, x_u], axis=0)
+            y_lab = fewshot_phase5_labels(c, x_o, x_u, pseudo,
+                                          cfg.fewshot_relabel_overlap)
+            lab_mask = jnp.concatenate(
+                [jnp.ones(x_o.shape[0], jnp.float32), take])
+            tasks.append(ssl_task_for(c, x_lab, y_lab, x_u,
+                                      labeled_mask=lab_mask,
+                                      unlabeled_mask=1.0 - take))
+            diags[s].setdefault("fewshot_take_rate", []).append(
+                _safe_mean(take))
+        tasks_per_seed.append(tasks)
+    params_all, metrics_all, paths = engine.train_clients_ssl_seeds(
+        kss, tasks_per_seed, cfg.ssl_hparams(), mode=cfg.engine_mode)
+    for s in range(num_seeds):
+        diags[s]["engine_path"] = paths[s]
+        diags[s].setdefault("ssl_metrics", []).extend(metrics_all[s])
+        clients_all[s] = [replace(c, params=p)
+                          for c, p in zip(clients_all[s], params_all[s])]
 
-    # ⑥' final upload + classifier re-fit
-    reps = []
+    # ⑥' final upload + classifier re-fit (seed-batched)
+    reps_all = [[c.extract(x_o).astype(cfg.rep_dtype)
+                 for c, x_o in zip(clients_all[s], splits[s].aligned)]
+                for s in range(num_seeds)]
     r5 = ledger.next_round()
-    for c, x_o in zip(clients, split.aligned):
-        h = c.extract(x_o).astype(cfg.rep_dtype)
-        ledger.log(c.index, "up", "reps_overlap_final", h, round=r5)
-        reps.append(h)
-    key, kf = jax.random.split(key)
-    server.train_classifier(kf, reps, split.labels,
-                            epochs=cfg.server_epochs, batch_size=cfg.batch_size,
-                            learning_rate=cfg.server_lr)
+    for k in range(num_parties):
+        _log_seeds(ledger, k, "up", "reps_overlap_final",
+                   [reps_all[s][k] for s in range(num_seeds)], r5)
+    kfs = []
+    for s in range(num_seeds):
+        st_keys[s], kf = jax.random.split(st_keys[s])
+        kfs.append(kf)
+    train_classifier_seeds(kfs, servers, reps_all,
+                           [sp.labels for sp in splits],
+                           epochs=cfg.server_epochs,
+                           batch_size=cfg.batch_size,
+                           learning_rate=cfg.server_lr)
 
-    name, metric = _evaluate(server, clients, split)
-    return VFLResult(name, metric, ledger, clients, server, diagnostics)
+    results = []
+    for s in range(num_seeds):
+        name, metric = _evaluate(servers[s], clients_all[s], splits[s])
+        results.append(VFLResult(name, metric, ledger, clients_all[s],
+                                 servers[s], diags[s]))
+    return results
+
+
+def run_few_shot(
+    key: jax.Array,
+    split: VerticalSplit,
+    extractors: Sequence[Model],
+    ssl_cfgs: Sequence[SSLConfig],
+    cfg: Optional[ProtocolConfig] = None,
+) -> VFLResult:
+    return _few_shot_seeds([key], [split], [extractors], [ssl_cfgs], cfg)[0]
+
+
+# ---------------------------------------------------- multi-seed orchestrator
+def _splits_are_homogeneous(splits: Sequence[VerticalSplit]) -> bool:
+    """True when every seed's split shares all shapes and the class count —
+    the precondition of seed-batched execution (one scenario point's seeds
+    satisfy it by construction; communication is then seed-invariant)."""
+    s0 = splits[0]
+
+    def sig(sp):
+        return (tuple(x.shape for x in sp.aligned),
+                tuple(x.shape for x in sp.unaligned),
+                tuple(x.shape for x in sp.test_aligned),
+                sp.labels.shape, sp.test_labels.shape, sp.num_classes)
+
+    return all(sig(sp) == sig(s0) for sp in splits[1:])
+
+
+def _copy_ledger(ledger: CommLedger) -> CommLedger:
+    return CommLedger(events=list(ledger.events),
+                      _round_counter=ledger._round_counter)
+
+
+def _assert_ledgers_identical(ledgers: Sequence[CommLedger]) -> None:
+    l0 = ledgers[0]
+    for i, led in enumerate(ledgers[1:], start=1):
+        if (led.total_bytes() != l0.total_bytes()
+                or led.comm_times() != l0.comm_times()
+                or led.by_tag() != l0.by_tag()):
+            raise ValueError(
+                f"seed {i} produced a different communication ledger than "
+                f"seed 0 — multi-seed runs of one scenario point must be "
+                f"byte-identical ({led.total_bytes()} vs {l0.total_bytes()} "
+                f"bytes)")
+
+
+def run_seeds(
+    runner,
+    keys: Sequence[jax.Array],
+    splits: Sequence[VerticalSplit],
+    extractors: Sequence[Sequence[Model]],
+    ssl_cfgs: Sequence[Sequence[SSLConfig]],
+    cfg=None,
+    **runner_kwargs,
+) -> List[VFLResult]:
+    """Run one scenario point over S seeds (DESIGN.md §10).
+
+    For the protocol runners (``run_one_shot`` / ``run_few_shot``) the
+    seeds execute seed-BATCHED: S·K local-SSL sessions fold into one
+    stacked vmapped program, the k-means and the server fits vmap over the
+    seed axis, and the communication ledger is produced host-side ONCE and
+    asserted byte-identical across seeds (each result carries its own
+    copy). Every per-seed PRNG stream matches the corresponding
+    single-seed run's exactly, so ``run_seeds`` agrees with a Python loop
+    of single-seed runs at atol 1e-5 (tests/test_seed_batched.py pins it,
+    along with the zero-fresh-compiles contract for seeds ≥ 2).
+
+    Other runners (the iterative baselines) — or seed sets whose splits
+    don't share one shape — loop per seed over the runner's cached
+    sessions, with the same ledger byte-identity assertion.
+
+    Args mirror the runners', one entry per seed: ``keys[s]`` /
+    ``splits[s]`` / ``extractors[s]`` / ``ssl_cfgs[s]``; ``cfg`` and
+    ``runner_kwargs`` are shared. Per-seed *state* kwargs (``clients``,
+    ``server``, ``ledger``) are rejected: one object cannot serve S seeds
+    (a shared ledger would accumulate every seed's events and a shared
+    client/server stack would be trained S times over) — call the runner
+    directly for stateful single-seed composition. Returns one
+    ``VFLResult`` per seed.
+    """
+    num_seeds = len(keys)
+    if not (len(splits) == len(extractors) == len(ssl_cfgs) == num_seeds):
+        raise ValueError("run_seeds needs one split / extractor stack / "
+                         "ssl-cfg list per seed")
+    stateful = sorted({"clients", "server", "ledger"} & set(runner_kwargs))
+    if stateful:
+        raise ValueError(
+            f"run_seeds does not accept per-seed state kwargs {stateful}: "
+            f"one object cannot serve every seed — call the runner "
+            f"directly instead")
+    batched_impl = {run_one_shot: _one_shot_seeds,
+                    run_few_shot: _few_shot_seeds}.get(runner)
+    if batched_impl is not None and _splits_are_homogeneous(splits):
+        results = batched_impl(list(keys), list(splits), list(extractors),
+                               list(ssl_cfgs), cfg, **runner_kwargs)
+        if num_seeds > 1:       # the shared prototype ledger → per-seed copies
+            for res in results:
+                res.ledger = _copy_ledger(res.ledger)
+        return results
+    results = [runner(k, sp, ex, sc, cfg, **runner_kwargs)
+               for k, sp, ex, sc in zip(keys, splits, extractors, ssl_cfgs)]
+    _assert_ledgers_identical([r.ledger for r in results])
+    return results

@@ -11,7 +11,10 @@ identity + optimizer hyper-parameters. A few-shot run performs K aux fits
 plus three joint fits; a 15-scenario × seeds sweep used to re-trace a fresh
 ``jax.jit`` step for every single one — now each distinct (arch, shapes,
 epochs, bs, lr) combination compiles exactly once per process
-(DESIGN.md §9).
+(DESIGN.md §9). The protocol's seed-batched runs go through
+``train_classifier_seeds`` / ``fit_aux_classifiers_seeds``, which vmap the
+same session over a seed axis (DESIGN.md §10) with per-seed key/schedule
+discipline identical to the methods'.
 """
 from __future__ import annotations
 
@@ -101,44 +104,126 @@ class VFLServer:
         return self.classifier.apply(self.params, concat_reps(reps))
 
 
-def _fit(key, model: Model, params, x, y, epochs, batch_size, lr):
-    """Whole classifier fit as one cached, jitted ``lax.scan`` session.
-
-    The schedule (shuffled epochs, drop-remainder — identical batches to
-    the historical Python loop) is materialized up front; params/data/
-    schedule travel as arguments so the compiled session is reusable
-    across seeds and scenario points of equal shapes."""
-    n = x.shape[0]
+def _fit_schedule(key, n: int, epochs: int, batch_size: int):
+    """The fit's epoch×minibatch schedule (shuffled epochs, drop-remainder —
+    identical batches to the historical Python loop), materialized host-side
+    so it travels as an argument. ``None`` means a no-op fit (epochs == 0,
+    or n < batch_size with drop-remainder)."""
     bs = min(batch_size, n)
     seed0 = int(jax.random.randint(key, (), 0, 2**31 - 1))
     rows = [idx for e in range(epochs) for idx in epoch_batches(n, bs, seed0 + e)]
-    if not rows:                                 # epochs == 0 (or n < bs with
-        return params                            # drop-remainder): no-op fit
-    schedule = jnp.asarray(np.stack(rows), jnp.int32)
+    if not rows:
+        return None
+    return jnp.asarray(np.stack(rows), jnp.int32)
 
-    def build():
-        tx = optim.chain(optim.clip_by_global_norm(5.0),
-                         optim.sgd(lr, momentum=0.9))
 
-        def session(params, x, y, schedule):
-            opt_state = tx.init(params)
+def _fit_session(model: Model, lr):
+    """The whole-classifier-fit ``lax.scan`` session as a pure function of
+    (params, x, y, schedule). ``_fit`` jits and caches it; the seed-batched
+    path (``engine.batched.fit_sessions_batched``) vmaps it over a leading
+    batch axis — both against the same session cache domain."""
+    tx = optim.chain(optim.clip_by_global_norm(5.0),
+                     optim.sgd(lr, momentum=0.9))
 
-            def body(carry, idx):
-                p, o = carry
+    def session(params, x, y, schedule):
+        opt_state = tx.init(params)
 
-                def loss_fn(p_):
-                    return jnp.mean(cross_entropy(model.apply(p_, x[idx]),
-                                                  y[idx]))
+        def body(carry, idx):
+            p, o = carry
 
-                loss, grads = jax.value_and_grad(loss_fn)(p)
-                updates, o = tx.update(grads, o, p)
-                return (optim.apply_updates(p, updates), o), loss
+            def loss_fn(p_):
+                return jnp.mean(cross_entropy(model.apply(p_, x[idx]),
+                                              y[idx]))
 
-            (params, _), _ = jax.lax.scan(body, (params, opt_state), schedule)
-            return params
+            loss, grads = jax.value_and_grad(loss_fn)(p)
+            updates, o = tx.update(grads, o, p)
+            return (optim.apply_updates(p, updates), o), loss
 
-        return jax.jit(session, donate_argnums=(0,))
+        (params, _), _ = jax.lax.scan(body, (params, opt_state), schedule)
+        return params
 
+    return session
+
+
+def _fit(key, model: Model, params, x, y, epochs, batch_size, lr):
+    """Whole classifier fit as one cached, jitted ``lax.scan`` session.
+
+    Params/data/schedule travel as arguments so the compiled session is
+    reusable across seeds and scenario points of equal shapes."""
+    schedule = _fit_schedule(key, x.shape[0], epochs, batch_size)
+    if schedule is None:
+        return params
     fit = sessions.cached_session(
-        "server_fit", (sessions.model_key(model), float(lr)), build)
+        "server_fit", (sessions.model_key(model), float(lr)),
+        lambda: jax.jit(_fit_session(model, lr), donate_argnums=(0,)))
     return fit(params, x, y, schedule)
+
+
+# ------------------------------------------------- seed-batched server fits
+def train_classifier_seeds(keys, servers: Sequence[VFLServer],
+                           reps_per_seed, labels_per_seed,
+                           epochs: int = 50, batch_size: int = 32,
+                           learning_rate: float = 0.01):
+    """Seed-batched :meth:`VFLServer.train_classifier`: per-seed key and
+    schedule discipline identical to the method (so a multi-seed run matches
+    a Python loop of single-seed runs), but every seed's fit executes inside
+    ONE vmapped scan session (DESIGN.md §10)."""
+    from repro.engine import batched   # deferred: engine init imports core
+
+    hs = [concat_reps(r) for r in reps_per_seed]
+    params, scheds = [], []
+    for key, srv, h in zip(keys, servers, hs):
+        if srv.classifier is None:
+            srv.classifier = make_classifier(srv.num_classes)
+        key, k0 = jax.random.split(key)
+        params.append(srv.classifier.init(k0, h))
+        scheds.append(_fit_schedule(key, h.shape[0], epochs, batch_size))
+    mk0 = sessions.model_key(servers[0].classifier)
+    assert all(sessions.model_key(s.classifier) == mk0 for s in servers[1:]), \
+        "seed-batched classifier fit requires semantically equal classifiers"
+    if any(sc is None for sc in scheds):         # no-op fits are all-or-none
+        assert all(sc is None for sc in scheds)  # (equal n/epochs per seed)
+        fitted = params
+    else:
+        fitted = batched.fit_sessions_batched(
+            servers[0].classifier, learning_rate, params, hs,
+            labels_per_seed, scheds)
+    for srv, p in zip(servers, fitted):
+        srv.params = p
+    return servers
+
+
+def fit_aux_classifiers_seeds(keys, servers: Sequence[VFLServer],
+                              reps_per_seed, labels_per_seed,
+                              epochs: int = 50, batch_size: int = 32,
+                              learning_rate: float = 0.01):
+    """Seed-batched :meth:`VFLServer.fit_aux_classifiers`: for each party,
+    every seed's aux fit folds into one vmapped scan session. All fits of
+    one architecture × learning rate share a single cached program with the
+    joint-classifier fits (domain ``"server_fit"``)."""
+    from repro.engine import batched   # deferred: engine init imports core
+
+    keys = list(keys)
+    for srv in servers:
+        srv.aux_classifiers, srv.aux_params = [], []
+    num_parties = len(reps_per_seed[0])
+    for k_idx in range(num_parties):
+        params, hs, scheds, clfs = [], [], [], []
+        for s, srv in enumerate(servers):
+            h = reps_per_seed[s][k_idx]
+            keys[s], k0, k1 = jax.random.split(keys[s], 3)
+            clf = make_classifier(srv.num_classes)
+            clfs.append(clf)
+            hs.append(h)
+            params.append(clf.init(k0, h))
+            scheds.append(_fit_schedule(k1, h.shape[0], epochs, batch_size))
+        if any(sc is None for sc in scheds):
+            assert all(sc is None for sc in scheds)
+            fitted = params
+        else:
+            fitted = batched.fit_sessions_batched(
+                clfs[0], learning_rate, params, hs, labels_per_seed, scheds)
+        for srv, clf, p in zip(servers, clfs, fitted):
+            srv.aux_classifiers.append(clf)
+            srv.aux_params.append(p)
+    return servers

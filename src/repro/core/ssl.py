@@ -106,8 +106,10 @@ def ssl_loss(
     l_u = jnp.sum(ce_u * mask) / jnp.maximum(jnp.sum(mask), 1.0)
 
     loss = l_s + cfg.lambda_u * l_u
+    # static-shape guard: a zero-row unlabeled batch (full-overlap party,
+    # empty private pool) must report rate 0, not the NaN of an empty mean
     metrics = {
         "loss": loss, "l_s": l_s, "l_u": l_u,
-        "pseudo_mask_rate": jnp.mean(mask),
+        "pseudo_mask_rate": jnp.sum(mask) / max(mask.shape[0], 1),
     }
     return loss, metrics

@@ -116,7 +116,10 @@ def make_vfl_partition(
     n_test = int(n * test_fraction)
     test_idx = perm[:n_test]
     rest = perm[n_test:]
-    assert overlap_size <= len(rest) - num_parties, "not enough rows for this overlap"
+    # overlap_size == len(rest) is the full-overlap edge: every training row
+    # is aligned and the per-party private pools are empty (0, d_k) arrays —
+    # the engine schedules zero-width unlabeled batches for them
+    assert overlap_size <= len(rest), "not enough rows for this overlap"
     aligned_idx = rest[:overlap_size]
     pool = rest[overlap_size:]
     per = len(pool) // num_parties

@@ -6,6 +6,10 @@ local-SSL training from the step functions defined here, so the paper's
 "all client computation happens between the exchanges" claim is one
 implementation, not two. See DESIGN.md §2.
 
+Multi-seed scenario sweeps fold into the same machinery: the vmapped
+session's client axis is a plain batch axis, so ``engine.batched`` stacks
+S seeds × K parties into one S·K-entry program (DESIGN.md §10).
+
 Kernel dispatch for the protocol's two Pallas hot-spots (k-means assignment,
 SDPA estimation) is funneled through :func:`pseudo_labels` and
 :func:`estimate_missing` behind a single ``use_kernels`` switch.
@@ -18,17 +22,26 @@ from repro.engine.local_ssl import (
     build_schedule,
     make_ssl_optimizer,
     make_ssl_step_fn,
+    parties_are_homogeneous,
     tasks_are_homogeneous,
     train_clients_ssl,
     train_parties_ssl_vmapped,
     train_party_ssl,
 )
 from repro.engine.dispatch import estimate_missing, pseudo_labels
-from repro.engine import iterative, sessions
+from repro.engine import batched, iterative, sessions
+from repro.engine.batched import (
+    fit_sessions_batched,
+    flatten_seed_tasks,
+    pseudo_labels_seeds,
+    train_clients_ssl_seeds,
+    unflatten_seed_results,
+)
 from repro.engine.sessions import (clear_session_cache, session_cache_stats,
                                    session_cache_stats_by_domain)
 
 __all__ = [
+    "batched",
     "iterative",
     "sessions",
     "clear_session_cache",
@@ -40,11 +53,17 @@ __all__ = [
     "SSLHParams",
     "build_schedule",
     "estimate_missing",
+    "fit_sessions_batched",
+    "flatten_seed_tasks",
     "make_ssl_optimizer",
     "make_ssl_step_fn",
+    "parties_are_homogeneous",
     "pseudo_labels",
+    "pseudo_labels_seeds",
     "tasks_are_homogeneous",
     "train_clients_ssl",
+    "train_clients_ssl_seeds",
     "train_parties_ssl_vmapped",
     "train_party_ssl",
+    "unflatten_seed_results",
 ]

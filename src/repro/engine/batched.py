@@ -1,0 +1,167 @@
+"""Seed-batched engine execution (DESIGN.md §10).
+
+The vmapped SSL session's client axis is a plain batch axis: nothing in the
+compiled program knows that entry ``i`` is "party i" rather than "party
+i mod K of seed i // K". This module exploits that to make multi-seed
+sweeps a *compiled* capability instead of a Python loop over seeds:
+
+* :func:`train_clients_ssl_seeds` — S seeds × K parties fold into ONE
+  stacked axis of S·K entries and train as one jitted program. The session
+  cache (``engine.sessions``, domain ``"ssl"``) keys on semantic model
+  identity + hyper-parameters, never on batch width, so seeds ≥ 2 add zero
+  fresh session builds over a single-seed run (``jax.jit`` re-specializes
+  the one cached session per stacked shape).
+* :func:`pseudo_labels_seeds` — the step-③ gradient k-means over all
+  S·K gradient matrices as one cached ``vmap`` program (bit-identical to
+  the per-call path; pinned in tests/test_seed_batched.py).
+* :func:`fit_sessions_batched` — the server classifier fits
+  (``core.server._fit``'s ``lax.scan`` session) vmapped over a leading
+  batch axis: a multi-seed scenario point's K·S aux fits + S joint fits
+  run as a handful of batched calls against one cached program.
+
+Per-seed randomness is *reproduced*, not re-derived: every fold takes the
+exact per-seed keys/schedules the single-seed path would have consumed, so
+``core.protocol.run_seeds`` matches a Python loop of single-seed runs at
+atol 1e-5 (bit-exact on CPU for the k-means and fit folds).
+
+Heterogeneous shapes (per-party feature dims, ragged gradient dims) and
+the Pallas kernel path (``pallas_call`` does not support interpret-mode
+``vmap``) fall back to per-entry execution — same numerics, no fold.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine import sessions
+from repro.engine.local_ssl import (PartyParams, PartyTask, SSLHParams,
+                                    tasks_are_homogeneous, train_clients_ssl,
+                                    train_parties_ssl_vmapped)
+
+
+def flatten_seed_tasks(tasks_per_seed: Sequence[Sequence[PartyTask]]
+                       ) -> List[PartyTask]:
+    """[[seed0 party0..K-1], [seed1 ...], …] → seed-major flat list."""
+    return [t for seed_tasks in tasks_per_seed for t in seed_tasks]
+
+
+def unflatten_seed_results(flat: Sequence[Any], num_seeds: int,
+                           num_parties: int) -> List[List[Any]]:
+    """Inverse of :func:`flatten_seed_tasks` for per-task results."""
+    return [list(flat[s * num_parties:(s + 1) * num_parties])
+            for s in range(num_seeds)]
+
+
+# ------------------------------------------------------- SSL: the S·K fold
+def train_clients_ssl_seeds(keys: Sequence[jax.Array],
+                            tasks_per_seed: Sequence[Sequence[PartyTask]],
+                            hp: SSLHParams, mode: str = "auto"
+                            ) -> Tuple[List[List[PartyParams]],
+                                       List[List[dict]], List[str]]:
+    """Every seed's every party's SSL session; returns per-seed
+    ``(params, metrics)`` lists plus the engine path each seed trained on.
+
+    ``S == 1`` delegates verbatim to :func:`train_clients_ssl` (the
+    single-seed dispatcher — byte-for-byte the historical behavior).
+    ``S > 1`` with a homogeneous S·K task set folds everything into one
+    vmapped session; each seed's per-party keys are split exactly as the
+    single-seed dispatcher splits them, so the fold and the loop consume
+    identical schedules and PRNG streams.
+    """
+    num_seeds = len(tasks_per_seed)
+    if num_seeds == 1:
+        params, metrics, vmapped = train_clients_ssl(
+            keys[0], tasks_per_seed[0], hp, mode=mode)
+        return [params], [metrics], ["vmap" if vmapped else "python"]
+
+    if mode not in ("auto", "vmap", "python"):
+        raise ValueError(f"unknown engine mode {mode!r}")
+    k = len(tasks_per_seed[0])
+    flat = flatten_seed_tasks(tasks_per_seed)
+    homogeneous = tasks_are_homogeneous(flat)
+    eff = mode
+    if mode == "auto":
+        env = os.environ.get("REPRO_ENGINE_MODE", "")
+        # multi-seed "auto" folds whenever the stacked shape exists — the
+        # whole point of batching seeds — unless the CI matrix forces the
+        # fallback loop (same knob the single-seed dispatcher honors)
+        eff = "python" if env == "python" else ("vmap" if homogeneous
+                                                else "python")
+    if eff == "vmap":
+        if not homogeneous:
+            raise ValueError("engine mode 'vmap' requires homogeneous party "
+                             "tasks across every seed of the fold; use "
+                             "mode='auto' or 'python'")
+        flat_keys = [kk for key in keys for kk in jax.random.split(key, k)]
+        params, metrics = train_parties_ssl_vmapped(flat_keys, flat, hp)
+        return (unflatten_seed_results(params, num_seeds, k),
+                unflatten_seed_results(metrics, num_seeds, k),
+                ["vmap"] * num_seeds)
+    out_p, out_m, paths = [], [], []
+    for key, tasks in zip(keys, tasks_per_seed):
+        params, metrics, vmapped = train_clients_ssl(key, tasks, hp,
+                                                     mode=mode)
+        out_p.append(params)
+        out_m.append(metrics)
+        paths.append("vmap" if vmapped else "python")
+    return out_p, out_m, paths
+
+
+# ----------------------------------------------- k-means: vmap over the fold
+def pseudo_labels_seeds(keys: Sequence[jax.Array],
+                        partial_grads: Sequence[jnp.ndarray],
+                        num_classes: int, kmeans_iters: int = 25,
+                        use_kernels: bool = False, restarts: int = 4
+                        ) -> List[jnp.ndarray]:
+    """Step ③ for a flat (seed-major) batch of gradient matrices: one
+    cached ``vmap`` of the jittable k-means when every entry shares one
+    shape — bit-identical per entry to the per-call path. The Pallas
+    kernel path (``use_kernels``) and ragged gradient shapes run per entry
+    (``pallas_call`` does not vmap in interpret mode)."""
+    from repro.engine.dispatch import pseudo_labels   # deferred: same package
+    if use_kernels or len({g.shape for g in partial_grads}) != 1:
+        return [pseudo_labels(k, g, num_classes, kmeans_iters,
+                              use_kernels=use_kernels)
+                for k, g in zip(keys, partial_grads)]
+    from repro.core import clustering                 # deferred: core imports engine
+
+    def build():
+        def one(key, grads):
+            return clustering.gradient_pseudo_labels(
+                key, grads, num_classes, kmeans_iters, use_kernel=False,
+                restarts=restarts)
+
+        return jax.jit(jax.vmap(one))
+
+    fn = sessions.cached_session(
+        "kmeans", ("vmap", num_classes, kmeans_iters, restarts), build)
+    out = fn(jnp.stack(list(keys)), jnp.stack(list(partial_grads)))
+    return [out[i] for i in range(out.shape[0])]
+
+
+# --------------------------------------------- server fits: vmapped sessions
+def fit_sessions_batched(model, lr: float, params_list: Sequence[Any],
+                         xs: Sequence[jnp.ndarray], ys: Sequence[jnp.ndarray],
+                         schedules: Sequence[jnp.ndarray]) -> List[Any]:
+    """A batch of server classifier fits as ONE cached vmapped ``lax.scan``
+    session (domain ``"server_fit"``, keyed next to the plain session).
+
+    Every entry must share the (x, y, schedule) shapes — true by
+    construction for one scenario point's seeds, whose schedules differ
+    only in *contents* (they travel as arguments). Entries may belong to
+    different seeds or different aux-classifier parties alike: the batch
+    axis is anonymous, exactly like the SSL fold's."""
+    from repro.core.server import _fit_session        # deferred: core imports engine
+
+    fitv = sessions.cached_session(
+        "server_fit", ("vmap", sessions.model_key(model), float(lr)),
+        lambda: jax.jit(jax.vmap(_fit_session(model, lr)),
+                        donate_argnums=(0,)))
+    stacked = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *params_list)
+    out = fitv(stacked, jnp.stack(list(xs)), jnp.stack(list(ys)),
+               jnp.stack(list(schedules)))
+    return [jax.tree_util.tree_map(lambda a: a[i], out)
+            for i in range(len(params_list))]

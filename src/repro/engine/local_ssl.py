@@ -37,6 +37,10 @@ and the fallback's per-step jit alike) are cached in the engine-wide
 session cache (``engine.sessions``, domain ``"ssl"``) keyed on semantic
 model identity + SSL/optimizer hyper-parameters, so repeated sessions
 across seeds and scenario sweeps never re-trace identical step math.
+
+The stacked client axis is a plain batch axis: ``engine.batched`` folds
+S seeds × K parties of a multi-seed sweep into one S·K-entry session of
+the same cached program (DESIGN.md §10).
 """
 from __future__ import annotations
 
@@ -142,14 +146,27 @@ def make_ssl_step_fn(extractor: Model, head: Model, ssl_cfg: "SSLConfig",
 
 
 # ------------------------------------------------------------------ schedule
+# Offset separating the unlabeled draw stream from the labeled shuffle
+# stream. The labeled epochs seed RandomState(seed0 + e) and the unlabeled
+# epochs RandomState(seed0 + 7919*e + _UNLABELED_STREAM): without the offset
+# the two streams collide at e = 0 (both seed0), so the first epoch's
+# labeled permutation and unlabeled index draws came from the SAME generator
+# state. The offset is a prime far above any epoch count, so neither stream
+# ever reuses the other's seed (7919*e + 104729 > e' for every e, e' < 10^4).
+_UNLABELED_STREAM = 104729
+
+
 def build_schedule(key: jax.Array, n_labeled: int, n_unlabeled: int,
                    hp: SSLHParams) -> Schedule:
     """Flatten the epoch×minibatch loop into one (S, …) step schedule.
 
     Labeled batches are shuffled epochs (drop-remainder); unlabeled batches
-    are independent uniform draws (FixMatch's μ× larger batches). Keys and
-    indices are materialized up front so the scan path and the Python path
-    consume bit-identical randomness.
+    are independent uniform draws (FixMatch's μ× larger batches) from a
+    decorrelated stream (``_UNLABELED_STREAM``). Keys and indices are
+    materialized up front so the scan path and the Python path consume
+    bit-identical randomness. ``n_unlabeled == 0`` (a full-overlap party
+    with an empty private pool) yields zero-width unlabeled batches; the
+    masked loss path keeps them at exactly zero contribution.
     """
     bs_l = min(hp.batch_size, n_labeled)
     bs_u = min(hp.batch_size * hp.unlabeled_ratio, n_unlabeled)
@@ -157,10 +174,11 @@ def build_schedule(key: jax.Array, n_labeled: int, n_unlabeled: int,
     idx_l: List[np.ndarray] = []
     idx_u: List[np.ndarray] = []
     for e in range(hp.epochs):
-        u_rng = np.random.RandomState(seed0 + 7919 * e)
+        u_rng = np.random.RandomState(seed0 + 7919 * e + _UNLABELED_STREAM)
         for batch in epoch_batches(n_labeled, bs_l, seed0 + e):
             idx_l.append(batch)
-            idx_u.append(u_rng.randint(0, n_unlabeled, size=bs_u))
+            idx_u.append(u_rng.randint(0, n_unlabeled, size=bs_u)
+                         if n_unlabeled > 0 else np.zeros(0, np.int64))
     if not idx_l:                        # epochs == 0: an empty session
         return Schedule(
             idx_labeled=jnp.zeros((0, bs_l), jnp.int32),
@@ -269,6 +287,26 @@ def tasks_are_homogeneous(tasks: Sequence[PartyTask]) -> bool:
             if a is not None and a.shape != a0.shape:
                 return False
     return True
+
+
+def parties_are_homogeneous(extractors: Sequence[Model],
+                            ssl_cfgs: Sequence["SSLConfig"],
+                            feature_shapes: Sequence[tuple]) -> bool:
+    """Spec-level equivalent of :func:`tasks_are_homogeneous`: the vmap
+    fast path's precondition evaluated *before* any ``PartyTask`` exists —
+    from a scenario's extractor stack, SSL configs, and per-party aligned
+    feature shapes. Equal data shapes alone are NOT sufficient (a model-zoo
+    scenario can have equal dims but distinct forward functions, which
+    legitimately takes the Python fallback); the apply-fn identity check is
+    what the engine actually dispatches on."""
+    e0 = extractors[0]
+    if any(not _apply_fns_match(e, e0) for e in extractors[1:]):
+        return False
+    if any(e.rep_dim != e0.rep_dim for e in extractors[1:]):
+        return False
+    if any(c != ssl_cfgs[0] for c in ssl_cfgs[1:]):
+        return False
+    return len({tuple(s)[1:] for s in feature_shapes}) == 1
 
 
 def train_parties_ssl_vmapped(keys: Sequence[jax.Array],

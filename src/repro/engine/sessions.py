@@ -20,9 +20,15 @@ Cache keys combine:
   / ``IterHParams`` / ``SSLConfig``, plain floats/ints/bools).
 
 Hit/miss counters are tracked per *domain* (the first element of every
-cache key: ``"iterative"``, ``"ssl"``, ``"server_fit"``) so benchmarks can
-report compile counts per subsystem and tests can pin the no-recompile
-contract without cross-talk (``session_cache_stats(domain=...)``).
+cache key: ``"iterative"``, ``"ssl"``, ``"server_fit"``, ``"kmeans"``) so
+benchmarks can report compile counts per subsystem and tests can pin the
+no-recompile contract without cross-talk
+(``session_cache_stats(domain=...)``).
+
+Because keys never encode batch width, the seed-batched folds of
+DESIGN.md §10 (``engine.batched``) re-serve the same cached programs at
+any stacked S·K shape — multi-seed sweeps add zero fresh session builds
+beyond the first seed.
 """
 from __future__ import annotations
 

@@ -110,6 +110,26 @@ for _n_o in (32, 64):
     ))
 
 register(ScenarioSpec(
+    # full-overlap edge: every training row is aligned, the per-party
+    # private pools are EMPTY — the engine must schedule zero-width
+    # unlabeled batches (l_u ≡ 0) instead of NaN-ing the SSL loss
+    # (regression scenario for the n_unlabeled == 0 guard)
+    name="edge/full-overlap",
+    modality="tabular",
+    generator="tabular_credit",
+    overlap=800,                  # == all non-test rows of 1000 @ 20% test
+    num_samples=1000,
+    feature_sizes=(10, 13),
+    rep_dim=16,
+    budgets=(("client_epochs", 4), ("server_epochs", 20),
+             ("iterations", 200)),
+    tags=("edge", "tabular"),
+    smoke_overlap=800,            # smoke() must keep the pools empty
+    smoke_samples=1000,
+    description="full overlap: N_o = all rows, empty private pools",
+))
+
+register(ScenarioSpec(
     name="image/halves",
     modality="image",
     generator="image_classification",
