@@ -13,11 +13,13 @@ over ``--seeds N`` seeds (default 1). The paper's headline claims are
 *statistical* — orderings that hold across runs, not at one seed — so the
 sweep emits one row per (scenario, method, seed) plus, for N > 1, one
 AGGREGATE row per (scenario, method) carrying metric mean/std/min/max.
-Multi-seed runs execute through ``repro.core.protocol.run_seeds``: the
-protocol methods fold all seeds into the engine's stacked programs
-(DESIGN.md §10 — S seeds x K parties on one vmapped axis, zero fresh
-compiled-session builds beyond the first seed), so statistical power grows
-N-fold while wall-clock grows far sublinearly.
+Multi-seed runs execute through ``repro.core.protocol.run_seeds``: EVERY
+method folds all seeds into the engine's stacked programs — the protocol
+methods on the vmapped S x K client axis (DESIGN.md §10), the iterative
+baselines as one ``vmap``-of-scan over stacked whole-session carries
+(DESIGN.md §11) — with zero fresh compiled-session builds beyond the
+first seed, so statistical power grows N-fold while wall-clock grows far
+sublinearly.
 
 Each row records metric (AUC or accuracy), ledger bytes, comm times,
 wall-clock (per-seed rows: the method's sweep wall amortized over seeds),
@@ -34,8 +36,10 @@ CI wiring (.github/workflows/ci.yml, job ``bench-smoke``)::
         --smoke --seeds 2 --check-gate
 
 ``--smoke`` restricts to the registry's ``smoke``-tagged scenarios at
-CI-tractable sizes. ``--check-gate`` then enforces the paper's headline
-ordering on the fresh results, per scenario with overlap<=64:
+CI-tractable sizes; the scheduled nightly tier (ci.yml job
+``bench-frontier-nightly``) runs the full set at ``--seeds 4``.
+``--check-gate`` then enforces the paper's headline ordering on the fresh
+results, per scenario with overlap<=64:
 
 * bytes: one-shot must move >= 100x fewer bytes than iterative (bytes are
   shape-functions — seed-invariant, asserted by run_seeds);
@@ -44,14 +48,20 @@ ordering on the fresh results, per scenario with overlap<=64:
   ``benchmarks/frontier_baseline.json`` (default: > 0);
 * WORST seed: no single seed's margin may fall below ``min_worst_margin``
   (default: >= 0 — one-shot never loses a seed);
+* FEW-SHOT margins, same two statistics against the
+  ``fewshot_min_mean_margin`` / ``fewshot_min_worst_margin`` floors —
+  few-shot is the framework's accuracy ceiling, so its comparative claim
+  is gated alongside one-shot's;
 * one-shot's ledger bytes must not regress above the recorded baseline.
 
 Under ``REPRO_ENGINE_MODE=vmap`` it additionally requires every one-shot
-AND few-shot per-seed row to have trained on the vmapped engine path.
-``vmap_eligible`` comes from the engine's own homogeneity predicate
+AND few-shot per-seed row to have trained on the vmapped engine path, and
+every iterative/fedcvt per-seed row to have run the seed-batched ``scan``
+fold. ``vmap_eligible`` comes from the engine's own homogeneity predicate
 (``engine.parties_are_homogeneous`` — apply-fn identity, not the old
 shape heuristic, which would wrongly gate equal-dim model-zoo scenarios
-whose Python path is legitimate).
+whose Python path is legitimate); the scan fold needs no homogeneity, so
+the iterative check is unconditional.
 """
 from __future__ import annotations
 
@@ -181,12 +191,37 @@ def run_scenario(spec, seeds, smoke: bool, methods=METHODS):
     return rows
 
 
+def _check_margins(name: str, method_rows: dict, its: dict, label: str,
+                   min_mean: float, min_worst: float, problems: list) -> None:
+    """Mean-margin + worst-seed dominance of one method over iterative."""
+    shared_seeds = sorted(set(method_rows) & set(its))
+    if not shared_seeds:
+        return
+    margins = {s: method_rows[s]["metric"] - its[s]["metric"]
+               for s in shared_seeds}
+    mean_margin = sum(margins.values()) / len(margins)
+    if mean_margin <= min_mean:
+        problems.append(
+            f"{name}: {label} mean margin over iterative "
+            f"{mean_margin:+.4f} <= floor {min_mean:+.4f} "
+            f"(seeds {shared_seeds})"
+        )
+    worst_seed = min(margins, key=margins.get)
+    if margins[worst_seed] < min_worst:
+        problems.append(
+            f"{name}: {label} worst-seed margin {margins[worst_seed]:+.4f} "
+            f"(seed {worst_seed}) < floor {min_worst:+.4f}"
+        )
+
+
 def check_gate(rows, baseline_path: str = BASELINE_PATH) -> list:
     """The CI regression gate. Returns a list of violation strings.
 
     Point estimates upgraded to seed statistics: the one-shot-vs-iterative
-    ordering is enforced on the MEAN margin across seeds plus a worst-seed
-    floor, instead of a single seed's (possibly lucky) point comparison.
+    AND few-shot-vs-iterative orderings are enforced on the MEAN margin
+    across seeds plus a worst-seed floor, instead of a single seed's
+    (possibly lucky) point comparison — few-shot is the framework's
+    accuracy ceiling, so its margins are gated alongside one-shot's.
     """
     problems = []
     per_seed = [r for r in rows if not r.get("aggregate")]
@@ -210,10 +245,36 @@ def check_gate(rows, baseline_path: str = BASELINE_PATH) -> list:
                     f"on engine_path={r.get('engine_path')!r} under "
                     f"REPRO_ENGINE_MODE=vmap"
                 )
+            # the iterative baselines must have run the seed-batched scan
+            # fold (DESIGN.md §11) — the scan session needs no party
+            # homogeneity, so no vmap_eligible exemption applies
+            if r["method"] in ("iterative", "fedcvt") \
+                    and r.get("engine_path") != "scan":
+                problems.append(
+                    f"{r['scenario']} seed {r['seed']}: {r['method']} trained "
+                    f"on engine_path={r.get('engine_path')!r} under "
+                    f"REPRO_ENGINE_MODE=vmap (expected the seed-batched "
+                    f"'scan' fold)"
+                )
+        # engine_path=="scan" alone cannot distinguish the fold from the
+        # per-seed fallback loop — seed_fold (the width the runner actually
+        # folded) must cover every seed of the sweep
+        num_sweep_seeds = len({r["seed"] for r in per_seed})
+        for r in per_seed:
+            fold = r.get("seed_fold")
+            if fold is not None and fold != num_sweep_seeds:
+                problems.append(
+                    f"{r['scenario']} seed {r['seed']}: {r['method']} ran "
+                    f"seed_fold={fold} — the {num_sweep_seeds}-seed sweep "
+                    f"fell back to the per-seed loop instead of the "
+                    f"DESIGN.md §10-11 fold"
+                )
 
     for name in scenario_names:
         ones = {r["seed"]: r for r in per_seed
                 if r["scenario"] == name and r["method"] == "one_shot"}
+        fews = {r["seed"]: r for r in per_seed
+                if r["scenario"] == name and r["method"] == "few_shot"}
         its = {r["seed"]: r for r in per_seed
                if r["scenario"] == name and r["method"] == "iterative"}
         if not ones:
@@ -240,24 +301,19 @@ def check_gate(rows, baseline_path: str = BASELINE_PATH) -> list:
             problems.append(
                 f"{name}: one-shot bytes advantage {ratio:.0f}x < 100x"
             )
-        shared_seeds = sorted(set(ones) & set(its))
-        margins = {s: ones[s]["metric"] - its[s]["metric"]
-                   for s in shared_seeds}
-        mean_margin = sum(margins.values()) / len(margins)
-        min_mean = base.get("min_mean_margin", 0.0)
-        if mean_margin <= min_mean:
+        _check_margins(name, ones, its, "one-shot",
+                       base.get("min_mean_margin", 0.0),
+                       base.get("min_worst_margin", 0.0), problems)
+        if not fews:
+            # a margin that was never measured must not read as a pass
             problems.append(
-                f"{name}: one-shot mean margin over iterative "
-                f"{mean_margin:+.4f} <= floor {min_mean:+.4f} "
-                f"(seeds {shared_seeds})"
+                f"{name}: no few_shot rows — the few-shot margin gate "
+                f"cannot be evaluated (run all METHODS, or drop --check-gate "
+                f"for partial sweeps)"
             )
-        worst_seed = min(margins, key=margins.get)
-        min_worst = base.get("min_worst_margin", 0.0)
-        if margins[worst_seed] < min_worst:
-            problems.append(
-                f"{name}: worst-seed margin {margins[worst_seed]:+.4f} "
-                f"(seed {worst_seed}) < floor {min_worst:+.4f}"
-            )
+        _check_margins(name, fews, its, "few-shot",
+                       base.get("fewshot_min_mean_margin", 0.0),
+                       base.get("fewshot_min_worst_margin", 0.0), problems)
     return problems
 
 
@@ -319,8 +375,9 @@ def main(argv=None) -> int:
             for p in problems:
                 print(f"GATE VIOLATION: {p}", file=sys.stderr)
             return 1
-        print("gate: one-shot dominates iterative (bytes >=100x, mean margin "
-              "+ worst seed) and bytes match the recorded baseline")
+        print("gate: one-shot AND few-shot dominate iterative (bytes >=100x, "
+              "mean margin + worst seed), engine paths as forced, and bytes "
+              "match the recorded baseline")
     return 0
 
 

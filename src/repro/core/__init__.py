@@ -3,7 +3,10 @@ from repro.core.comm import CommLedger
 from repro.core.protocol import (ProtocolConfig, VFLResult, run_few_shot,
                                  run_few_shot_finetune, run_one_shot,
                                  run_seeds)
-from repro.core.baselines import IterativeConfig, run_fedbcd, run_fedcvt, run_vanilla
+from repro.core.baselines import (IterativeConfig, run_fedbcd,
+                                  run_fedbcd_seeds, run_fedcvt,
+                                  run_fedcvt_seeds, run_vanilla,
+                                  run_vanilla_seeds)
 from repro.core.ssl import SSLConfig
 
 __all__ = [
@@ -17,6 +20,9 @@ __all__ = [
     "run_few_shot_finetune",
     "run_seeds",
     "run_vanilla",
+    "run_vanilla_seeds",
     "run_fedbcd",
+    "run_fedbcd_seeds",
     "run_fedcvt",
+    "run_fedcvt_seeds",
 ]

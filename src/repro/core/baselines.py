@@ -13,11 +13,21 @@
   pseudo-labels (the cross-view-training idea, without the paper's full
   5-loss apparatus — see DESIGN.md §7).
 
-``run_vanilla`` and ``run_fedcvt`` execute through the engine's iterative
-session path (``repro.engine.iterative``): the whole S-iteration session is
-one jitted ``lax.scan`` program (or a Python loop over the cached jitted
-step with ``engine_mode="python"``), and the compiled session is cached
-across calls so scenario sweeps never recompile identical step math.
+Every baseline executes through the engine's iterative session path
+(``repro.engine.iterative``): the whole S-iteration session is one jitted
+``lax.scan`` program (or a Python loop over the cached jitted step with
+``engine_mode="python"``), and the compiled session is cached across calls
+so scenario sweeps never recompile identical step math.
+
+Each runner is the S = 1 case of a seed-batched ``*_seeds`` entry
+(DESIGN.md §11, mirroring the protocol's ``_one_shot_seeds`` pattern):
+``run_vanilla_seeds`` / ``run_fedcvt_seeds`` / ``run_fedbcd_seeds`` stack
+S seeds' whole-session carries on a leading seed axis and train them as
+ONE ``vmap``-of-scan program (``engine.batched``), with each seed's exact
+single-seed key/schedule discipline reproduced host-side and the
+communication ledger — a function of shapes, which are seed-invariant —
+produced once and shared by every per-seed result.
+``core.protocol.run_seeds`` routes the baselines here.
 
 All baselines train *only* on information the respective method is allowed
 to see; all transfers go through the CommLedger.
@@ -29,15 +39,16 @@ from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import optim
 from repro.core.client import ClientParams, VFLClient
 from repro.core.comm import CommLedger
 from repro.core.protocol import VFLResult, _build_clients, _evaluate
 from repro.core.server import VFLServer, concat_reps
-from repro.core.ssl import SSLConfig, cross_entropy
+from repro.core.ssl import SSLConfig
 from repro.data.loader import epoch_batches
-from repro.engine import iterative
+from repro.engine import batched, iterative
 from repro.models.extractors import Model, make_classifier
 
 
@@ -96,6 +107,101 @@ def _log_iterative_rounds(ledger: CommLedger, clients: Sequence[VFLClient],
             ledger.log_bytes(c.index, "down", "grads_batch", num, round=r_dn)
 
 
+def _seed_sessions_setup(keys, splits, extractors, ssl_cfgs,
+                         cfg: IterativeConfig, make_schedule,
+                         clients_per_seed=None, servers=None):
+    """The per-seed setup every ``*_seeds`` runner shares — ONE
+    implementation of the single-seed key discipline (``key, kc, ks =
+    split(keys[s], 3)``, clients from ``kc``, server init from ``ks``,
+    ``seed0`` drawn from ``key``) that the parity tests pin.
+    ``make_schedule(seed0, n)`` builds the runner's minibatch schedule.
+    Returns ``(clients_all, servers_all, schedules, carries)``."""
+    num_seeds = len(keys)
+    clients_all, servers_all, schedules, carries = [], [], [], []
+    for s in range(num_seeds):
+        key, kc, ks = jax.random.split(keys[s], 3)
+        given = clients_per_seed[s] if clients_per_seed is not None else None
+        clients = (given if given is not None else
+                   _build_clients(kc, splits[s], extractors[s], ssl_cfgs[s]))
+        server = servers[s] if servers is not None else None
+        if server is None or server.params is None:
+            server = VFLServer(num_classes=splits[s].num_classes)
+            reps0 = [c.extract(x[:2])
+                     for c, x in zip(clients, splits[s].aligned)]
+            server = _init_server(ks, server, reps0)
+        seed0 = int(jax.random.randint(key, (), 0, 2**31 - 1))
+        schedules.append(make_schedule(seed0, splits[s].labels.shape[0]))
+        carries.append(_session_carry(clients, server, cfg))
+        clients_all.append(clients)
+        servers_all.append(server)
+    return clients_all, servers_all, schedules, carries
+
+
+def _finish_seed_results(cfg: IterativeConfig, ledger: CommLedger,
+                         clients_all, servers, splits, carries, losses,
+                         extra_diags=None) -> List[VFLResult]:
+    """Shared tail of every seed-batched baseline: install the trained
+    carries, evaluate per seed, and attach the (shared) ledger — callers
+    copy it per seed when S > 1 (``run_seeds`` does)."""
+    num_seeds = len(carries)
+    results = []
+    for s in range(num_seeds):
+        cp, sp = carries[s][0], carries[s][1]
+        clients = [replace(c, params=ClientParams(*p))
+                   for c, p in zip(clients_all[s], cp)]
+        servers[s].params = sp
+        name, metric = _evaluate(servers[s], clients, splits[s])
+        diag = {"engine_path": iterative.resolve_mode(cfg.engine_mode),
+                "seed_fold": num_seeds,
+                "final_loss": (float(losses[s][-1]) if losses.shape[1]
+                               else None)}
+        if extra_diags is not None:
+            diag.update(extra_diags)
+        results.append(VFLResult(name, metric, ledger, clients, servers[s],
+                                 diag))
+    return results
+
+
+def run_vanilla_seeds(
+    keys: Sequence[jax.Array],
+    splits: Sequence,
+    extractors: Sequence[Sequence[Model]],
+    ssl_cfgs: Sequence[Sequence[SSLConfig]],
+    cfg: Optional[IterativeConfig] = None,
+    clients_per_seed: Optional[Sequence[Optional[List[VFLClient]]]] = None,
+    servers: Optional[Sequence[Optional[VFLServer]]] = None,
+    ledger: Optional[CommLedger] = None,
+) -> List[VFLResult]:
+    """Vanilla SplitNN VFL over S seeds at once (DESIGN.md §11): every
+    seed's whole-session ``lax.scan`` carry stacks on a leading seed axis
+    and the fold trains as one program. Per-seed PRNG/schedule discipline
+    matches the historical single-seed runner exactly — S = 1 *is*
+    ``run_vanilla``. All results share ``ledger`` (bytes are a function of
+    shapes, seed-invariant); multi-seed callers copy it per result.
+
+    ``clients_per_seed`` / ``servers`` admit pre-trained per-seed state —
+    the chained few-shot + finetune fold threads the folded few-shot
+    output carry straight into this folded finetune session."""
+    cfg = cfg if cfg is not None else IterativeConfig()
+    ledger = ledger if ledger is not None else CommLedger()
+    clients_all, servers_all, schedules, carries = _seed_sessions_setup(
+        keys, splits, extractors, ssl_cfgs, cfg,
+        lambda seed0, n: iterative.build_iteration_schedule(
+            seed0, n, cfg.batch_size, cfg.iterations),
+        clients_per_seed=clients_per_seed, servers=servers)
+    carries, losses = batched.splitnn_sessions_seeds(
+        [[c.extractor for c in cl] for cl in clients_all],
+        [srv.classifier for srv in servers_all], cfg.iter_hparams(),
+        carries, [sp.aligned for sp in splits],
+        [sp.labels for sp in splits], schedules, mode=cfg.engine_mode)
+
+    bs = min(cfg.batch_size, splits[0].labels.shape[0])
+    _log_iterative_rounds(ledger, clients_all[0], cfg.iterations, bs)
+    return _finish_seed_results(cfg, ledger, clients_all, servers_all,
+                                splits, carries, losses,
+                                {"iterations": cfg.iterations})
+
+
 def run_vanilla(
     key: jax.Array,
     split,
@@ -106,35 +212,58 @@ def run_vanilla(
     server: Optional[VFLServer] = None,
     ledger: Optional[CommLedger] = None,
 ) -> VFLResult:
+    return run_vanilla_seeds([key], [split], [extractors], [ssl_cfgs], cfg,
+                             clients_per_seed=[clients], servers=[server],
+                             ledger=ledger)[0]
+
+
+def _fedbcd_schedule(seed0: int, n: int, batch_size: int,
+                     rounds: int) -> jnp.ndarray:
+    """(rounds, bs) minibatch indices replicating the historical FedBCD
+    loop exactly: each shuffled epoch is seeded ``seed0 + rounds_done`` at
+    its *entry* (not ``seed0 + epoch`` — the historical loop reseeded on
+    the round counter), drop-remainder, truncated to ``rounds`` rows."""
+    bs = min(batch_size, n)
+    if rounds <= 0:
+        return jnp.zeros((0, bs), jnp.int32)
+    rows: List[np.ndarray] = []
+    while len(rows) < rounds:
+        for b in epoch_batches(n, bs, seed0 + len(rows)):
+            rows.append(b)
+            if len(rows) == rounds:
+                break
+    return jnp.asarray(np.stack(rows), jnp.int32)
+
+
+def run_fedbcd_seeds(
+    keys: Sequence[jax.Array],
+    splits: Sequence,
+    extractors: Sequence[Sequence[Model]],
+    ssl_cfgs: Sequence[Sequence[SSLConfig]],
+    cfg: Optional[IterativeConfig] = None,
+) -> List[VFLResult]:
+    """FedBCD-p over S seeds at once: per round, one rep exchange then Q
+    parallel local updates on the stale partial gradients (clients) / stale
+    reps (server) — the whole multi-seed session one folded scan program
+    (DESIGN.md §11), where it used to re-``jax.jit`` an ad-hoc round step
+    per call."""
     cfg = cfg if cfg is not None else IterativeConfig()
-    ledger = ledger if ledger is not None else CommLedger()
-    key, kc, ks = jax.random.split(key, 3)
-    if clients is None:
-        clients = _build_clients(kc, split, extractors, ssl_cfgs)
-    if server is None or server.params is None:
-        server = VFLServer(num_classes=split.num_classes)
-        reps0 = [c.extract(x[:2]) for c, x in zip(clients, split.aligned)]
-        server = _init_server(ks, server, reps0)
+    ledger = CommLedger()
+    rounds = cfg.iterations // cfg.fedbcd_q
+    clients_all, servers_all, schedules, carries = _seed_sessions_setup(
+        keys, splits, extractors, ssl_cfgs, cfg,
+        lambda seed0, n: _fedbcd_schedule(seed0, n, cfg.batch_size, rounds))
+    carries, losses = batched.fedbcd_sessions_seeds(
+        [[c.extractor for c in cl] for cl in clients_all],
+        [srv.classifier for srv in servers_all], cfg.iter_hparams(),
+        cfg.fedbcd_q, carries, [sp.aligned for sp in splits],
+        [sp.labels for sp in splits], schedules, mode=cfg.engine_mode)
 
-    n = split.labels.shape[0]
-    bs = min(cfg.batch_size, n)
-    seed0 = int(jax.random.randint(key, (), 0, 2**31 - 1))
-    schedule = iterative.build_iteration_schedule(seed0, n, cfg.batch_size,
-                                                  cfg.iterations)
-    carry = _session_carry(clients, server, cfg)
-    carry, losses = iterative.splitnn_session(
-        [c.extractor for c in clients], server.classifier, cfg.iter_hparams(),
-        carry, split.aligned, split.labels, schedule, mode=cfg.engine_mode)
-    cp, sp = carry[0], carry[1]
-
-    _log_iterative_rounds(ledger, clients, cfg.iterations, bs)
-    clients = [replace(c, params=ClientParams(*p)) for c, p in zip(clients, cp)]
-    server.params = sp
-    name, metric = _evaluate(server, clients, split)
-    return VFLResult(name, metric, ledger, clients, server,
-                     {"iterations": cfg.iterations,
-                      "engine_path": iterative.resolve_mode(cfg.engine_mode),
-                      "final_loss": float(losses[-1]) if len(losses) else None})
+    bs = min(cfg.batch_size, splits[0].labels.shape[0])
+    _log_iterative_rounds(ledger, clients_all[0], rounds, bs)
+    return _finish_seed_results(cfg, ledger, clients_all, servers_all,
+                                splits, carries, losses,
+                                {"rounds": rounds, "Q": cfg.fedbcd_q})
 
 
 def run_fedbcd(
@@ -144,87 +273,51 @@ def run_fedbcd(
     ssl_cfgs: Sequence[SSLConfig],
     cfg: Optional[IterativeConfig] = None,
 ) -> VFLResult:
-    """FedBCD-p: per round, one rep exchange then Q parallel local updates on
-    the stale partial gradients (clients) / stale reps (server)."""
+    return run_fedbcd_seeds([key], [split], [extractors], [ssl_cfgs],
+                            cfg)[0]
+
+
+def run_fedcvt_seeds(
+    keys: Sequence[jax.Array],
+    splits: Sequence,
+    extractors: Sequence[Sequence[Model]],
+    ssl_cfgs: Sequence[Sequence[SSLConfig]],
+    cfg: Optional[IterativeConfig] = None,
+) -> List[VFLResult]:
+    """FedCVT-style semi-supervised baseline over S seeds at once: vanilla
+    iterative VFL + per-iteration cross-view training-set expansion. Each
+    round, missing reps of a sampled unaligned batch are attention-
+    estimated from the overlap batch and samples whose classifier
+    confidence exceeds the threshold train with their pseudo labels. The
+    whole multi-seed session is one folded scan program
+    (``engine.batched.fedcvt_sessions_seeds``, DESIGN.md §11)."""
     cfg = cfg if cfg is not None else IterativeConfig()
     ledger = CommLedger()
-    key, kc, ks = jax.random.split(key, 3)
-    clients = _build_clients(kc, split, extractors, ssl_cfgs)
-    server = VFLServer(num_classes=split.num_classes)
-    reps0 = [c.extract(x[:2]) for c, x in zip(clients, split.aligned)]
-    server = _init_server(ks, server, reps0)
+    clients_all, servers_all, schedules, carries = _seed_sessions_setup(
+        keys, splits, extractors, ssl_cfgs, cfg,
+        lambda seed0, n: iterative.build_iteration_schedule(
+            seed0, n, cfg.batch_size, cfg.iterations))
+    # the unaligned draws are key-free (historically seeded literally 0):
+    # only pool sizes and the batch width enter
+    u_schedules = [iterative.build_unaligned_schedule(
+        0, [x.shape[0] for x in sp.unaligned],
+        min(cfg.batch_size, sp.labels.shape[0]), cfg.iterations)
+        for sp in splits]
+    carries, losses = batched.fedcvt_sessions_seeds(
+        [[c.extractor for c in cl] for cl in clients_all],
+        [srv.classifier for srv in servers_all], cfg.iter_hparams(),
+        carries, [sp.aligned for sp in splits],
+        [sp.labels for sp in splits], schedules,
+        [sp.unaligned for sp in splits], u_schedules,
+        mode=cfg.engine_mode)
 
-    txs = [optim.sgd(cfg.client_lr, momentum=cfg.momentum) for _ in clients]
-    tx_s = optim.sgd(cfg.server_lr, momentum=cfg.momentum)
-    exts = [c.extractor for c in clients]
-    clf = server.classifier
-    Q = cfg.fedbcd_q
-
-    @jax.jit
-    def round_step(client_params, server_params, opt_states, opt_state_s, xs, y):
-        # --- one communication round: fresh reps and partial gradients -----
-        reps = [ext.apply(p.extractor, x) for ext, p, x in zip(exts, client_params, xs)]
-
-        def rep_loss(rep_list, sp):
-            logits = clf.apply(sp, concat_reps(rep_list))
-            return jnp.mean(cross_entropy(logits, y))
-
-        g_reps = jax.grad(rep_loss, argnums=0)(reps, server_params)
-
-        # --- Q stale-gradient local updates on each client ------------------
-        new_cp, new_os = [], []
-        for ext, p, os_, tx, x, g in zip(exts, client_params, opt_states, txs, xs, g_reps):
-            def q_body(_, carry):
-                p_, os__ = carry
-                def local_obj(pp):
-                    # <stale ∂L/∂H, f_k(x; θ)> — the FedBCD surrogate
-                    return jnp.sum(jax.lax.stop_gradient(g) * ext.apply(pp.extractor, x))
-                gq = jax.grad(local_obj)(p_)
-                upd, os__ = tx.update(gq, os__, p_)
-                return optim.apply_updates(p_, upd), os__
-            p, os_ = jax.lax.fori_loop(0, Q, q_body, (p, os_))
-            new_cp.append(p)
-            new_os.append(os_)
-
-        # --- Q server updates on the stale reps -----------------------------
-        def s_body(_, carry):
-            sp, os_s = carry
-            gs = jax.grad(lambda spp: rep_loss([jax.lax.stop_gradient(r) for r in reps], spp))(sp)
-            upd, os_s = tx_s.update(gs, os_s, sp)
-            return optim.apply_updates(sp, upd), os_s
-        server_params, opt_state_s = jax.lax.fori_loop(0, Q, s_body, (server_params, opt_state_s))
-        return new_cp, server_params, new_os, opt_state_s
-
-    client_params = [c.params for c in clients]
-    server_params = server.params
-    opt_states = [tx.init(p) for tx, p in zip(txs, client_params)]
-    opt_state_s = tx_s.init(server_params)
-
-    n = split.labels.shape[0]
-    bs = min(cfg.batch_size, n)
-    rep_dim = clients[0].extractor.rep_dim
-    rounds = cfg.iterations // Q
-    it = 0
-    seed0 = int(jax.random.randint(key, (), 0, 2**31 - 1))
-    while it < rounds:
-        for idx in epoch_batches(n, bs, seed0 + it):
-            if it >= rounds:
-                break
-            xs = [x[idx] for x in split.aligned]
-            client_params, server_params, opt_states, opt_state_s = round_step(
-                client_params, server_params, opt_states, opt_state_s,
-                xs, split.labels[idx])
-            r_up, r_dn = ledger.next_round(), ledger.next_round()
-            for c in clients:
-                ledger.log_bytes(c.index, "up", "reps_batch", bs * rep_dim * 4, round=r_up)
-                ledger.log_bytes(c.index, "down", "grads_batch", bs * rep_dim * 4, round=r_dn)
-            it += 1
-
-    clients = [replace(c, params=ClientParams(*p)) for c, p in zip(clients, client_params)]
-    server.params = server_params
-    name, metric = _evaluate(server, clients, split)
-    return VFLResult(name, metric, ledger, clients, server,
-                     {"rounds": rounds, "Q": Q})
+    # overlap reps + unaligned reps up; both gradients down
+    bs = min(cfg.batch_size, splits[0].labels.shape[0])
+    _log_iterative_rounds(ledger, clients_all[0], cfg.iterations, bs,
+                          payload_factor=2)
+    return _finish_seed_results(cfg, ledger, clients_all, servers_all,
+                                splits, carries, losses,
+                                {"iterations": cfg.iterations})
 
 
 def run_fedcvt(
@@ -234,41 +327,5 @@ def run_fedcvt(
     ssl_cfgs: Sequence[SSLConfig],
     cfg: Optional[IterativeConfig] = None,
 ) -> VFLResult:
-    """FedCVT-style semi-supervised baseline: vanilla iterative VFL +
-    per-iteration cross-view training-set expansion. Each round, missing
-    reps of a sampled unaligned batch are attention-estimated from the
-    overlap batch and samples whose classifier confidence exceeds the
-    threshold train with their pseudo labels. Runs as one engine session
-    (``repro.engine.iterative.fedcvt_session``)."""
-    cfg = cfg if cfg is not None else IterativeConfig()
-    ledger = CommLedger()
-    key, kc, ks = jax.random.split(key, 3)
-    clients = _build_clients(kc, split, extractors, ssl_cfgs)
-    server = VFLServer(num_classes=split.num_classes)
-    reps0 = [c.extract(x[:2]) for c, x in zip(clients, split.aligned)]
-    server = _init_server(ks, server, reps0)
-
-    n = split.labels.shape[0]
-    bs = min(cfg.batch_size, n)
-    seed0 = int(jax.random.randint(key, (), 0, 2**31 - 1))
-    schedule = iterative.build_iteration_schedule(seed0, n, cfg.batch_size,
-                                                  cfg.iterations)
-    u_schedules = iterative.build_unaligned_schedule(
-        0, [x.shape[0] for x in split.unaligned], bs, cfg.iterations)
-    carry = _session_carry(clients, server, cfg)
-    carry, losses = iterative.fedcvt_session(
-        [c.extractor for c in clients], server.classifier, cfg.iter_hparams(),
-        carry, split.aligned, split.labels, schedule,
-        split.unaligned, u_schedules, mode=cfg.engine_mode)
-    cp, sp = carry[0], carry[1]
-
-    # overlap reps + unaligned reps up; both gradients down
-    _log_iterative_rounds(ledger, clients, cfg.iterations, bs,
-                          payload_factor=2)
-    clients = [replace(c, params=ClientParams(*p)) for c, p in zip(clients, cp)]
-    server.params = sp
-    name, metric = _evaluate(server, clients, split)
-    return VFLResult(name, metric, ledger, clients, server,
-                     {"iterations": cfg.iterations,
-                      "engine_path": iterative.resolve_mode(cfg.engine_mode),
-                      "final_loss": float(losses[-1]) if len(losses) else None})
+    return run_fedcvt_seeds([key], [split], [extractors], [ssl_cfgs],
+                            cfg)[0]

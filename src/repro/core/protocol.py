@@ -91,7 +91,7 @@ class VFLResult:
             "comm_bytes": int(self.ledger.total_bytes()),
             "comm_times": int(self.ledger.comm_times()),
         }
-        for k in ("iterations", "engine_path"):
+        for k in ("iterations", "engine_path", "seed_fold"):
             if k in self.diagnostics:
                 row[k] = self.diagnostics[k]
         return row
@@ -229,8 +229,8 @@ def _one_shot_seeds(
     # ③ gradient clustering → pseudo labels;  ④ local SSL — both engine-
     # side and seed-batched: the S·K gradient matrices cluster in one
     # vmapped k-means, the S·K SSL sessions fold into one stacked program
-    diags = [{"kmeans_purity": [], "ssl_metrics": []}
-             for _ in range(num_seeds)]
+    diags = [{"kmeans_purity": [], "ssl_metrics": [],
+              "seed_fold": num_seeds} for _ in range(num_seeds)]
     kss = []
     flat_kmeans_keys, flat_grads = [], []
     for s in range(num_seeds):
@@ -300,6 +300,43 @@ def run_one_shot(
                            ledger=ledger, clients_per_seed=[clients])[0]
 
 
+def _few_shot_finetune_seeds(
+    keys: Sequence[jax.Array],
+    splits: Sequence[VerticalSplit],
+    extractors: Sequence[Sequence[Model]],
+    ssl_cfgs: Sequence[Sequence[SSLConfig]],
+    cfg: Optional[ProtocolConfig] = None,
+    finetune_iterations: int = 200,
+) -> List[VFLResult]:
+    """Tab. 1's last row over S seeds at once: the seed-batched few-shot
+    pass hands its per-seed output state (trained clients + fitted server)
+    straight to the seed-batched vanilla finetune — the folded few-shot
+    carry chains into the folded finetune session with no per-seed loop in
+    between, and the shared ledger accumulates both stages' transfers."""
+    from repro.core import baselines
+
+    cfg = cfg if cfg is not None else ProtocolConfig()
+    k1s, k2s = [], []
+    for s in range(len(keys)):
+        key, k1, k2 = jax.random.split(keys[s], 3)
+        k1s.append(k1)
+        k2s.append(k2)
+    fews = _few_shot_seeds(k1s, splits, extractors, ssl_cfgs, cfg)
+    it_cfg = baselines.IterativeConfig(iterations=finetune_iterations,
+                                       batch_size=cfg.batch_size,
+                                       client_lr=cfg.client_lr / 10,
+                                       server_lr=cfg.server_lr / 10)
+    results = baselines.run_vanilla_seeds(
+        k2s, splits, extractors, ssl_cfgs, it_cfg,
+        clients_per_seed=[f.clients for f in fews],
+        servers=[f.server for f in fews],
+        ledger=fews[0].ledger)       # one shared ledger spans both stages
+    for res, few in zip(results, fews):
+        res.diagnostics.update(few.diagnostics)
+        res.diagnostics["fewshot_metric"] = few.metric
+    return results
+
+
 def run_few_shot_finetune(
     key: jax.Array,
     split: VerticalSplit,
@@ -311,21 +348,9 @@ def run_few_shot_finetune(
     """Tab. 1's last row: few-shot VFL as pre-training, then end-to-end
     vanilla-VFL finetuning of the whole stack (extractors + classifier),
     sharing one ledger so the combined communication cost is visible."""
-    from repro.core import baselines
-
-    cfg = cfg if cfg is not None else ProtocolConfig()
-    key, k1, k2 = jax.random.split(key, 3)
-    few = run_few_shot(k1, split, extractors, ssl_cfgs, cfg)
-    it_cfg = baselines.IterativeConfig(iterations=finetune_iterations,
-                                       batch_size=cfg.batch_size,
-                                       client_lr=cfg.client_lr / 10,
-                                       server_lr=cfg.server_lr / 10)
-    res = baselines.run_vanilla(k2, split, extractors, ssl_cfgs, it_cfg,
-                                clients=few.clients, server=few.server,
-                                ledger=few.ledger)
-    res.diagnostics.update(few.diagnostics)
-    res.diagnostics["fewshot_metric"] = few.metric
-    return res
+    return _few_shot_finetune_seeds(
+        [key], [split], [extractors], [ssl_cfgs], cfg,
+        finetune_iterations=finetune_iterations)[0]
 
 
 # ------------------------------------------------------------- few-shot VFL
@@ -536,21 +561,25 @@ def run_seeds(
     cfg=None,
     **runner_kwargs,
 ) -> List[VFLResult]:
-    """Run one scenario point over S seeds (DESIGN.md §10).
+    """Run one scenario point over S seeds (DESIGN.md §10-11).
 
-    For the protocol runners (``run_one_shot`` / ``run_few_shot``) the
-    seeds execute seed-BATCHED: S·K local-SSL sessions fold into one
-    stacked vmapped program, the k-means and the server fits vmap over the
-    seed axis, and the communication ledger is produced host-side ONCE and
-    asserted byte-identical across seeds (each result carries its own
-    copy). Every per-seed PRNG stream matches the corresponding
-    single-seed run's exactly, so ``run_seeds`` agrees with a Python loop
-    of single-seed runs at atol 1e-5 (tests/test_seed_batched.py pins it,
-    along with the zero-fresh-compiles contract for seeds ≥ 2).
+    EVERY registered runner executes seed-BATCHED: the protocol runners
+    (``run_one_shot`` / ``run_few_shot`` / ``run_few_shot_finetune``) fold
+    S·K local-SSL sessions into one stacked vmapped program with the
+    k-means and server fits vmapped over the seed axis, and the iterative
+    baselines (``run_vanilla`` / ``run_fedcvt`` / ``run_fedbcd``) stack
+    their whole-session scan carries on a leading seed axis and train as
+    one ``vmap``-of-scan program. The communication ledger is produced
+    host-side ONCE and asserted byte-identical across seeds (each result
+    carries its own copy). Every per-seed PRNG stream matches the
+    corresponding single-seed run's exactly, so ``run_seeds`` agrees with
+    a Python loop of single-seed runs at atol 1e-5
+    (tests/test_seed_batched.py pins it, along with the
+    zero-fresh-compiles contract for seeds ≥ 2).
 
-    Other runners (the iterative baselines) — or seed sets whose splits
-    don't share one shape — loop per seed over the runner's cached
-    sessions, with the same ledger byte-identity assertion.
+    Unregistered runners — or seed sets whose splits don't share one
+    shape — loop per seed over the runner's cached sessions, with the
+    same ledger byte-identity assertion.
 
     Args mirror the runners', one entry per seed: ``keys[s]`` /
     ``splits[s]`` / ``extractors[s]`` / ``ssl_cfgs[s]``; ``cfg`` and
@@ -561,18 +590,28 @@ def run_seeds(
     directly for stateful single-seed composition. Returns one
     ``VFLResult`` per seed.
     """
+    from repro.core import baselines   # deferred: baselines imports protocol
+
     num_seeds = len(keys)
     if not (len(splits) == len(extractors) == len(ssl_cfgs) == num_seeds):
         raise ValueError("run_seeds needs one split / extractor stack / "
                          "ssl-cfg list per seed")
-    stateful = sorted({"clients", "server", "ledger"} & set(runner_kwargs))
+    stateful = sorted({"clients", "server", "ledger", "clients_per_seed",
+                       "servers"} & set(runner_kwargs))
     if stateful:
         raise ValueError(
             f"run_seeds does not accept per-seed state kwargs {stateful}: "
-            f"one object cannot serve every seed — call the runner "
-            f"directly instead")
-    batched_impl = {run_one_shot: _one_shot_seeds,
-                    run_few_shot: _few_shot_seeds}.get(runner)
+            f"one object cannot serve every seed (and the heterogeneous-"
+            f"splits fallback loop cannot thread per-seed state) — call "
+            f"the runner or its *_seeds entry directly instead")
+    batched_impl = {
+        run_one_shot: _one_shot_seeds,
+        run_few_shot: _few_shot_seeds,
+        run_few_shot_finetune: _few_shot_finetune_seeds,
+        baselines.run_vanilla: baselines.run_vanilla_seeds,
+        baselines.run_fedcvt: baselines.run_fedcvt_seeds,
+        baselines.run_fedbcd: baselines.run_fedbcd_seeds,
+    }.get(runner)
     if batched_impl is not None and _splits_are_homogeneous(splits):
         results = batched_impl(list(keys), list(splits), list(extractors),
                                list(ssl_cfgs), cfg, **runner_kwargs)

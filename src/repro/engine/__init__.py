@@ -31,11 +31,16 @@ from repro.engine.local_ssl import (
 from repro.engine.dispatch import estimate_missing, pseudo_labels
 from repro.engine import batched, iterative, sessions
 from repro.engine.batched import (
+    fedbcd_sessions_seeds,
+    fedcvt_sessions_seeds,
     fit_sessions_batched,
     flatten_seed_tasks,
     pseudo_labels_seeds,
+    splitnn_sessions_seeds,
+    stack_carries,
     train_clients_ssl_seeds,
     unflatten_seed_results,
+    unstack_carries,
 )
 from repro.engine.sessions import (clear_session_cache, session_cache_stats,
                                    session_cache_stats_by_domain)
@@ -53,6 +58,8 @@ __all__ = [
     "SSLHParams",
     "build_schedule",
     "estimate_missing",
+    "fedbcd_sessions_seeds",
+    "fedcvt_sessions_seeds",
     "fit_sessions_batched",
     "flatten_seed_tasks",
     "make_ssl_optimizer",
@@ -60,10 +67,13 @@ __all__ = [
     "parties_are_homogeneous",
     "pseudo_labels",
     "pseudo_labels_seeds",
+    "splitnn_sessions_seeds",
+    "stack_carries",
     "tasks_are_homogeneous",
     "train_clients_ssl",
     "train_clients_ssl_seeds",
     "train_parties_ssl_vmapped",
     "train_party_ssl",
     "unflatten_seed_results",
+    "unstack_carries",
 ]

@@ -18,6 +18,13 @@ sweeps a *compiled* capability instead of a Python loop over seeds:
   (``core.server._fit``'s ``lax.scan`` session) vmapped over a leading
   batch axis: a multi-seed scenario point's K·S aux fits + S joint fits
   run as a handful of batched calls against one cached program.
+* :func:`splitnn_sessions_seeds` / :func:`fedcvt_sessions_seeds` /
+  :func:`fedbcd_sessions_seeds` — the ITERATIVE seed fold (DESIGN.md
+  §11): the whole-session ``lax.scan`` carries of the SplitNN / FedCVT /
+  FedBCD baselines (all parties' extractor params, the server head, both
+  optimizer states) gain a leading seed axis and S seeds train as one
+  ``vmap``-of-scan program, under the same session-cache keys as the
+  single-seed sessions (zero fresh session builds for S ≥ 2).
 
 Per-seed randomness is *reproduced*, not re-derived: every fold takes the
 exact per-seed keys/schedules the single-seed path would have consumed, so
@@ -140,6 +147,106 @@ def pseudo_labels_seeds(keys: Sequence[jax.Array],
         "kmeans", ("vmap", num_classes, kmeans_iters, restarts), build)
     out = fn(jnp.stack(list(keys)), jnp.stack(list(partial_grads)))
     return [out[i] for i in range(out.shape[0])]
+
+
+# ------------------------------------------- iterative baselines: seed fold
+def stack_carries(carries: Sequence[Any]):
+    """Per-seed session carries → one carry whose leaves have a leading
+    seed axis (the inverse of :func:`unstack_carries`)."""
+    return jax.tree_util.tree_map(lambda *a: jnp.stack(a), *carries)
+
+
+def unstack_carries(carry, num_seeds: int) -> List[Any]:
+    """Split a stacked carry back into per-seed carries."""
+    return [jax.tree_util.tree_map(lambda a: a[s], carry)
+            for s in range(num_seeds)]
+
+
+def _stack_party_data(per_seed: Sequence[Sequence[jnp.ndarray]]
+                      ) -> Tuple[jnp.ndarray, ...]:
+    """[[seed0 party0..K-1], …] → per-party tuple of (S, n, d) stacks.
+
+    Parties may have heterogeneous feature dims — each party stacks only
+    across seeds, where one scenario point's shapes agree by construction."""
+    num_parties = len(per_seed[0])
+    return tuple(jnp.stack([seed_xs[k] for seed_xs in per_seed])
+                 for k in range(num_parties))
+
+
+def _assert_seed_models_equal(extractors_per_seed, classifiers) -> None:
+    ek0 = tuple(sessions.model_key(e) for e in extractors_per_seed[0])
+    ck0 = sessions.model_key(classifiers[0])
+    for exts, clf in zip(extractors_per_seed[1:], classifiers[1:]):
+        if (tuple(sessions.model_key(e) for e in exts) != ek0
+                or sessions.model_key(clf) != ck0):
+            raise ValueError(
+                "seed-batched iterative sessions require semantically equal "
+                "party extractors and server classifier across every seed "
+                "of the fold")
+
+
+def splitnn_sessions_seeds(extractors_per_seed, classifiers,
+                           hp, carries: Sequence[Any],
+                           xs_per_seed, ys, schedules,
+                           mode: str = "auto"):
+    """S seeds of one SplitNN session as ONE folded program.
+
+    ``extractors_per_seed[s]`` / ``classifiers[s]`` are each seed's models
+    (asserted semantically equal — one compiled step serves the fold);
+    ``carries[s]`` the per-seed session carry; ``xs_per_seed[s]`` /
+    ``ys[s]`` / ``schedules[s]`` the per-seed data and minibatch schedule.
+    Returns ``(per-seed carries, (S, iters) losses)``.
+    """
+    from repro.engine import iterative        # deferred: sibling module
+
+    _assert_seed_models_equal(extractors_per_seed, classifiers)
+    exts, clf = extractors_per_seed[0], classifiers[0]
+    carry, losses = iterative.run_iterative_session_seeds(
+        iterative.session_cache_key("splitnn", exts, clf, hp),
+        lambda: iterative.make_splitnn_step_fn(exts, clf, hp),
+        stack_carries(carries), _stack_party_data(xs_per_seed),
+        jnp.stack(list(ys)), jnp.stack(list(schedules)), mode)
+    return unstack_carries(carry, len(carries)), losses
+
+
+def fedcvt_sessions_seeds(extractors_per_seed, classifiers, hp,
+                          carries: Sequence[Any], xs_per_seed, ys,
+                          schedules, xs_u_per_seed, u_schedules,
+                          mode: str = "auto"):
+    """S seeds of one FedCVT-style session as ONE folded program; the
+    per-party unaligned pools and their draw schedules stack on the same
+    seed axis. Returns ``(per-seed carries, (S, iters) losses)``."""
+    from repro.engine import iterative        # deferred: sibling module
+
+    _assert_seed_models_equal(extractors_per_seed, classifiers)
+    exts, clf = extractors_per_seed[0], classifiers[0]
+    num_parties = len(u_schedules[0])
+    carry, losses = iterative.run_iterative_session_seeds(
+        iterative.session_cache_key("fedcvt", exts, clf, hp),
+        lambda: iterative.make_fedcvt_step_fn(exts, clf, hp),
+        stack_carries(carries), _stack_party_data(xs_per_seed),
+        jnp.stack(list(ys)), jnp.stack(list(schedules)), mode,
+        xs_u=_stack_party_data(xs_u_per_seed),
+        u_schedules=tuple(jnp.stack([us[k] for us in u_schedules])
+                          for k in range(num_parties)))
+    return unstack_carries(carry, len(carries)), losses
+
+
+def fedbcd_sessions_seeds(extractors_per_seed, classifiers, hp, q: int,
+                          carries: Sequence[Any], xs_per_seed, ys,
+                          schedules, mode: str = "auto"):
+    """S seeds of one FedBCD-p session (Q local updates per round) as ONE
+    folded program. Returns ``(per-seed carries, (S, rounds) losses)``."""
+    from repro.engine import iterative        # deferred: sibling module
+
+    _assert_seed_models_equal(extractors_per_seed, classifiers)
+    exts, clf = extractors_per_seed[0], classifiers[0]
+    carry, losses = iterative.run_iterative_session_seeds(
+        iterative.session_cache_key("fedbcd", exts, clf, hp, q),
+        lambda: iterative.make_fedbcd_step_fn(exts, clf, hp, q),
+        stack_carries(carries), _stack_party_data(xs_per_seed),
+        jnp.stack(list(ys)), jnp.stack(list(schedules)), mode)
+    return unstack_carries(carry, len(carries)), losses
 
 
 # --------------------------------------------- server fits: vmapped sessions

@@ -15,10 +15,18 @@ point. This module is the iterative counterpart of ``engine.local_ssl``
   cross-view training: unaligned batches whose missing-party reps are
   SDPA-estimated from the overlap batch join the loss when their
   pseudo-label confidence clears a threshold;
+* ``make_fedbcd_step_fn`` — FedBCD-p [20]: one rep/partial-gradient
+  exchange then Q parallel stale-gradient local updates per round;
 * ``run_iterative_session`` — executes S iterations either as one jitted
   ``lax.scan`` over a precomputed minibatch schedule (``"scan"``, the
   fast path) or as a Python loop over the cached jitted step
-  (``"python"``).
+  (``"python"``);
+* ``run_iterative_session_seeds`` — the seed-axis fold (DESIGN.md §11):
+  every array argument carries a leading seed axis and the whole
+  multi-seed session runs as ONE ``vmap``-of-``lax.scan`` program. The
+  single-seed ``run_iterative_session`` is its width-1 case, so one
+  cached program serves every seed count (the cache key has no batch
+  width — ``jax.jit`` re-specializes per stacked shape).
 
 Compiled callables are cached in the engine-wide session cache
 (``engine.sessions``, domain ``"iterative"``), keyed on the *semantic*
@@ -199,6 +207,64 @@ def make_fedcvt_step_fn(extractors: Sequence[Model], classifier: Model,
     return step
 
 
+def make_fedbcd_step_fn(extractors: Sequence[Model], classifier: Model,
+                        hp: IterHParams, q: int):
+    """One FedBCD-p communication round [20]: fresh reps up and partial
+    gradients down ONCE, then ``q`` parallel local updates — clients on the
+    stale rep-gradients (the ⟨stale ∂L/∂H, f_k(x;θ)⟩ surrogate), the server
+    on the stale reps. Signature matches ``make_splitnn_step_fn``; the loss
+    returned is the round-entry joint loss (before any local update)."""
+    from repro.core.server import concat_reps   # deferred: core imports engine
+    from repro.core.ssl import cross_entropy
+
+    extractors = tuple(extractors)
+    txs = tuple(optim.sgd(hp.client_lr, momentum=hp.momentum)
+                for _ in extractors)
+    tx_s = optim.sgd(hp.server_lr, momentum=hp.momentum)
+
+    def step(carry, xs, y, xs_u=None):
+        del xs_u
+        cp, sp, oss, os_s = carry
+        reps = [ext.apply(p.extractor, x)
+                for ext, p, x in zip(extractors, cp, xs)]
+
+        def rep_loss(rep_list, sp_):
+            logits = classifier.apply(sp_, concat_reps(rep_list))
+            return jnp.mean(cross_entropy(logits, y))
+
+        loss, g_reps = jax.value_and_grad(rep_loss, argnums=0)(reps, sp)
+
+        new_cp, new_os = [], []
+        for ext, p, os_, tx, x, g in zip(extractors, cp, oss, txs, xs,
+                                         g_reps):
+            def q_body(_, c, ext=ext, tx=tx, x=x, g=g):
+                p_, os__ = c
+
+                def local_obj(pp):
+                    return jnp.sum(jax.lax.stop_gradient(g)
+                                   * ext.apply(pp.extractor, x))
+
+                gq = jax.grad(local_obj)(p_)
+                upd, os__ = tx.update(gq, os__, p_)
+                return optim.apply_updates(p_, upd), os__
+
+            p, os_ = jax.lax.fori_loop(0, q, q_body, (p, os_))
+            new_cp.append(p)
+            new_os.append(os_)
+
+        def s_body(_, c):
+            sp_, os_s_ = c
+            gs = jax.grad(lambda spp: rep_loss(
+                [jax.lax.stop_gradient(r) for r in reps], spp))(sp_)
+            upd, os_s_ = tx_s.update(gs, os_s_, sp_)
+            return optim.apply_updates(sp_, upd), os_s_
+
+        sp, os_s = jax.lax.fori_loop(0, q, s_body, (sp, os_s))
+        return (tuple(new_cp), sp, tuple(new_os), os_s), loss
+
+    return step
+
+
 # -------------------------------------------------------------- schedules
 def build_iteration_schedule(seed: int, n: int, batch_size: int,
                              iterations: int) -> jnp.ndarray:
@@ -231,7 +297,7 @@ def build_unaligned_schedule(seed: int, pool_sizes: Sequence[int],
 
 
 # ---------------------------------------------------------------- sessions
-def run_iterative_session(
+def run_iterative_session_seeds(
     cache_key: tuple,
     make_step: Callable[[], Callable],
     carry,
@@ -242,20 +308,30 @@ def run_iterative_session(
     xs_u: Optional[Sequence[jnp.ndarray]] = None,
     u_schedules: Optional[Sequence[jnp.ndarray]] = None,
 ):
-    """Run S = ``schedule.shape[0]`` iterations of ``make_step()``'s step.
+    """The seed-axis fold (DESIGN.md §11): run every seed's whole session
+    as one program.
 
-    ``cache_key`` identifies the step math (models + hyper-parameters);
-    the compiled step/session is cached under it so later sessions with
-    the same key (and minibatch shapes) never recompile. Training data
-    travels as *arguments*, never in the cached closure, so one compiled
-    session serves every seed/scenario point of equal shapes.
+    Every array argument carries a leading seed axis S: ``carry`` leaves
+    are stacked on axis 0, ``xs``/``xs_u`` are per-party tuples of
+    ``(S, n, d)`` stacks, ``y`` is ``(S, n)``, and the schedules are
+    ``(S, iters, bs)`` — per-seed randomness lives in the schedule
+    *contents*, which travel as arguments, never in the compiled program.
 
-    Returns ``(carry, losses)`` with ``losses`` of shape (S,).
+    ``"scan"`` executes ONE cached ``jax.vmap``-of-``lax.scan`` program
+    under the SAME session-cache key as the historical single-seed scan
+    session (the key has no batch width, so folding seeds adds zero fresh
+    session builds; ``jax.jit`` re-specializes the cached program per
+    stacked shape). ``"python"`` loops seeds × steps over the cached
+    jitted step — byte-for-byte the historical per-seed fallback.
+
+    Returns ``(carry, losses)`` with the same stacking and ``losses`` of
+    shape ``(S, iters)``.
     """
     mode = resolve_mode(mode)
     xs = tuple(xs)
-    if schedule.shape[0] == 0:               # zero iterations: no-op session
-        return carry, jnp.zeros((0,))
+    num_seeds = schedule.shape[0]
+    if schedule.shape[1] == 0:               # zero iterations: no-op session
+        return carry, jnp.zeros((num_seeds, 0))
     has_u = xs_u is not None
     if has_u:
         xs_u = tuple(xs_u)
@@ -264,18 +340,26 @@ def run_iterative_session(
     if mode == "python":
         step = _cached(("step", has_u) + cache_key,
                        lambda: jax.jit(make_step()))
-        sched = np.asarray(schedule)
-        u_scheds = ([np.asarray(s) for s in u_schedules] if has_u else None)
-        losses = []
-        for i in range(sched.shape[0]):
-            xb = tuple(x[sched[i]] for x in xs)
-            xub = (tuple(xu[us[i]] for xu, us in zip(xs_u, u_scheds))
-                   if has_u else None)
-            carry, loss = step(carry, xb, y[sched[i]], xub)
-            losses.append(loss)
-        return carry, jnp.stack(losses) if losses else jnp.zeros((0,))
+        out_carries, out_losses = [], []
+        for s in range(num_seeds):
+            c = jax.tree_util.tree_map(lambda a: a[s], carry)
+            sched = np.asarray(schedule[s])
+            u_scheds = ([np.asarray(us[s]) for us in u_schedules]
+                        if has_u else None)
+            losses = []
+            for i in range(sched.shape[0]):
+                xb = tuple(x[s][sched[i]] for x in xs)
+                xub = (tuple(xu[s][us[i]] for xu, us in zip(xs_u, u_scheds))
+                       if has_u else None)
+                c, loss = step(c, xb, y[s][sched[i]], xub)
+                losses.append(loss)
+            out_carries.append(c)
+            out_losses.append(jnp.stack(losses))
+        return (jax.tree_util.tree_map(lambda *a: jnp.stack(a), *out_carries),
+                jnp.stack(out_losses))
 
-    # "scan": the whole session is one jitted program with donated carry.
+    # "scan": the whole multi-seed session is one jitted program with a
+    # donated stacked carry — vmap's batch axis IS the seed axis.
     if has_u:
         def build():
             step = make_step()
@@ -288,7 +372,7 @@ def run_iterative_session(
 
                 return jax.lax.scan(body, carry, (schedule, u_scheds))
 
-            return jax.jit(session, donate_argnums=(0,))
+            return jax.jit(jax.vmap(session), donate_argnums=(0,))
 
         session = _cached(("scan", True) + cache_key, build)
         return session(carry, xs, y, schedule, xs_u, u_schedules)
@@ -302,27 +386,75 @@ def run_iterative_session(
 
             return jax.lax.scan(body, carry, schedule)
 
-        return jax.jit(session, donate_argnums=(0,))
+        return jax.jit(jax.vmap(session), donate_argnums=(0,))
 
     session = _cached(("scan", False) + cache_key, build)
     return session(carry, xs, y, schedule)
 
 
+def run_iterative_session(
+    cache_key: tuple,
+    make_step: Callable[[], Callable],
+    carry,
+    xs: Sequence[jnp.ndarray],
+    y: jnp.ndarray,
+    schedule: jnp.ndarray,
+    mode: str = "auto",
+    xs_u: Optional[Sequence[jnp.ndarray]] = None,
+    u_schedules: Optional[Sequence[jnp.ndarray]] = None,
+):
+    """Run S = ``schedule.shape[0]`` iterations of ``make_step()``'s step —
+    the width-1 case of :func:`run_iterative_session_seeds` (one cached
+    program serves every seed count).
+
+    ``cache_key`` identifies the step math (models + hyper-parameters);
+    the compiled step/session is cached under it so later sessions with
+    the same key (and minibatch shapes) never recompile. Training data
+    travels as *arguments*, never in the cached closure, so one compiled
+    session serves every seed/scenario point of equal shapes.
+
+    Returns ``(carry, losses)`` with ``losses`` of shape (S,).
+    """
+    xs = tuple(xs)
+    if schedule.shape[0] == 0:               # zero iterations: no-op session
+        return carry, jnp.zeros((0,))
+    has_u = xs_u is not None
+    carry1 = jax.tree_util.tree_map(lambda a: jnp.asarray(a)[None], carry)
+    out, losses = run_iterative_session_seeds(
+        cache_key, make_step, carry1, tuple(x[None] for x in xs), y[None],
+        schedule[None], mode,
+        xs_u=(tuple(x[None] for x in xs_u) if has_u else None),
+        u_schedules=(tuple(s[None] for s in u_schedules)
+                     if has_u else None))
+    return jax.tree_util.tree_map(lambda a: a[0], out), losses[0]
+
+
+def session_cache_key(kind: str, extractors, classifier, hp: IterHParams,
+                      q: Optional[int] = None) -> tuple:
+    """THE cache key of one iterative step kind ("splitnn" | "fedcvt" |
+    "fedbcd"): model semantics + hyper-parameters (+ Q for FedBCD). Both
+    the single-seed sessions below and the seed fold
+    (``engine.batched.*_sessions_seeds``) build their keys here, so the
+    width-1 program and the fold can never drift onto separate cache
+    entries."""
+    key = (kind, tuple(_model_key(e) for e in extractors),
+           _model_key(classifier), hp)
+    return key if q is None else key + (int(q),)
+
+
 def splitnn_session(extractors, classifier, hp: IterHParams, carry, xs, y,
                     schedule, mode: str = "auto"):
     """SplitNN session with the cache key derived from model semantics."""
-    key = ("splitnn", tuple(_model_key(e) for e in extractors),
-           _model_key(classifier), hp)
     return run_iterative_session(
-        key, lambda: make_splitnn_step_fn(extractors, classifier, hp),
+        session_cache_key("splitnn", extractors, classifier, hp),
+        lambda: make_splitnn_step_fn(extractors, classifier, hp),
         carry, xs, y, schedule, mode)
 
 
 def fedcvt_session(extractors, classifier, hp: IterHParams, carry, xs, y,
                    schedule, xs_u, u_schedules, mode: str = "auto"):
     """FedCVT-style session with the cache key derived from model semantics."""
-    key = ("fedcvt", tuple(_model_key(e) for e in extractors),
-           _model_key(classifier), hp)
     return run_iterative_session(
-        key, lambda: make_fedcvt_step_fn(extractors, classifier, hp),
+        session_cache_key("fedcvt", extractors, classifier, hp),
+        lambda: make_fedcvt_step_fn(extractors, classifier, hp),
         carry, xs, y, schedule, mode, xs_u=xs_u, u_schedules=u_schedules)

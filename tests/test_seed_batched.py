@@ -1,15 +1,20 @@
-"""Seed-batched execution (DESIGN.md §10): ``run_seeds`` folds S seeds of
-one scenario point into the engine's stacked programs and must be
+"""Seed-batched execution (DESIGN.md §10-11): ``run_seeds`` folds S seeds
+of one scenario point into the engine's stacked programs and must be
 indistinguishable from a Python loop of single-seed runs:
 
-* per-seed metrics within 1e-5 of the loop's (params too, for one-shot);
+* per-seed metrics within 1e-5 of the loop's (params too, for one-shot
+  and the iterative baselines);
 * ledgers byte-identical — across seeds AND against the loop;
 * seeds >= 2 add ZERO fresh compiled-session builds over a 1-seed run
   (the cache keys carry no batch width; ``jax.jit`` re-specializes the
   one cached session per stacked shape);
-* the seed-folded k-means is bit-identical to the per-call path.
+* the seed-folded k-means is bit-identical to the per-call path;
+* the ITERATIVE fold (§11): ``run_vanilla``/``run_fedcvt``/``run_fedbcd``
+  stack their whole-session scan carries on a leading seed axis, and the
+  chained ``run_few_shot_finetune`` threads the folded few-shot output
+  carry straight into the folded finetune session.
 
-Plus the single-seed blind-spot regressions this PR fixes:
+Plus the single-seed blind-spot regressions PR 4 fixed:
 
 * ``build_schedule``'s epoch-0 labeled/unlabeled RNG-stream collision;
 * the ``n_unlabeled == 0`` (full-overlap party) NaN;
@@ -25,8 +30,9 @@ import numpy as np
 import pytest
 
 from repro import engine
-from repro.core import (ProtocolConfig, SSLConfig, run_few_shot,
-                        run_one_shot, run_vanilla)
+from repro.core import (IterativeConfig, ProtocolConfig, SSLConfig,
+                        run_fedbcd, run_fedcvt, run_few_shot,
+                        run_few_shot_finetune, run_one_shot, run_vanilla)
 from repro.core.protocol import fewshot_phase5_labels, run_seeds
 from repro.data import make_tabular_credit, make_vfl_partition
 from repro.models import make_mlp_extractor
@@ -119,14 +125,86 @@ def test_seed_batch_adds_zero_fresh_compiles(splits):
     assert two_seeds == one_seed, (one_seed, two_seeds)
 
 
-def test_run_seeds_iterative_fallback_loops_with_identical_ledgers(splits):
-    """Non-protocol runners take the per-seed loop (over cached scan
-    sessions) and still get the ledger byte-identity assertion; each seed
-    matches a direct single-seed call exactly."""
-    from repro.core import IterativeConfig
+@pytest.mark.parametrize("runner,icfg", [
+    (run_vanilla, IterativeConfig(iterations=20)),
+    (run_fedcvt, IterativeConfig(iterations=10)),
+    (run_fedbcd, IterativeConfig(iterations=20)),
+], ids=["vanilla", "fedcvt", "fedbcd"])
+def test_run_seeds_matches_single_seed_loop_iterative(runner, icfg, splits):
+    """The §11 parity: every iterative baseline's seed fold (stacked
+    whole-session scan carries, one vmap-of-scan program) per seed == the
+    single-seed runner at 1e-5 on the metric AND every client parameter
+    leaf, with byte-identical ledgers across seeds and vs the loop."""
+    batched = _run_seeds(runner, splits, icfg)
+    assert batched[0].ledger is not batched[1].ledger
+    _assert_ledgers_equal(batched[0].ledger, batched[1].ledger)
+    for s, split in zip(SEEDS, splits):
+        solo = runner(jax.random.PRNGKey(s), split, _ext(), _SSL, icfg)
+        res = batched[SEEDS.index(s)]
+        assert abs(float(res.metric) - float(solo.metric)) < 1e-5, \
+            (s, float(res.metric), float(solo.metric))
+        _assert_ledgers_equal(res.ledger, solo.ledger)
+        assert res.diagnostics["engine_path"] == \
+            solo.diagnostics["engine_path"]
+        for cb, cs in zip(res.clients, solo.clients):
+            for lb, ls in zip(jax.tree_util.tree_leaves(cb.params),
+                              jax.tree_util.tree_leaves(cs.params)):
+                assert jnp.allclose(lb, ls, atol=1e-5), \
+                    float(jnp.max(jnp.abs(lb - ls)))
 
-    icfg = IterativeConfig(iterations=20)
-    results = run_seeds(run_vanilla, [jax.random.PRNGKey(s) for s in SEEDS],
+
+def test_seed_batched_iterative_adds_zero_fresh_compiles(splits):
+    """Seeds >= 2 of an iterative baseline must add ZERO fresh compiled-
+    session builds over a single-seed run: the width-1 session IS the
+    folded session (one cache key, no batch width in it)."""
+    icfg = IterativeConfig(iterations=10)
+    engine.clear_session_cache()
+    run_seeds(run_vanilla, [jax.random.PRNGKey(0)], splits[:1], [_ext()],
+              [_SSL], icfg)
+    one_seed = {d: st["misses"]
+                for d, st in engine.session_cache_stats_by_domain().items()}
+    # the stronger §11 guarantee: a LATER multi-seed run re-serves the
+    # single-seed program — don't even clear the cache
+    _run_seeds(run_vanilla, splits, icfg)
+    two_seeds = {d: st["misses"]
+                 for d, st in engine.session_cache_stats_by_domain().items()}
+    assert two_seeds == one_seed, (one_seed, two_seeds)
+
+
+def test_run_seeds_few_shot_finetune_chains_the_folds(splits):
+    """The chained fold: seed-batched few-shot hands its per-seed output
+    state to the seed-batched vanilla finetune inside one ``run_seeds``
+    call — per seed == the single-seed ``run_few_shot_finetune`` at 1e-5,
+    with the combined (few-shot + finetune) ledger byte-identical."""
+    batched = run_seeds(run_few_shot_finetune,
+                        [jax.random.PRNGKey(s) for s in SEEDS], splits,
+                        [_ext() for _ in SEEDS], [_SSL for _ in SEEDS],
+                        _FAST, finetune_iterations=20)
+    _assert_ledgers_equal(batched[0].ledger, batched[1].ledger)
+    for s, split in zip(SEEDS, splits):
+        solo = run_few_shot_finetune(jax.random.PRNGKey(s), split, _ext(),
+                                     _SSL, _FAST, finetune_iterations=20)
+        res = batched[SEEDS.index(s)]
+        assert abs(float(res.metric) - float(solo.metric)) < 1e-5, \
+            (s, float(res.metric), float(solo.metric))
+        assert abs(res.diagnostics["fewshot_metric"]
+                   - solo.diagnostics["fewshot_metric"]) < 1e-5
+        _assert_ledgers_equal(res.ledger, solo.ledger)
+        # the combined ledger spans both stages: 5 few-shot comm times
+        # plus 2 per finetune iteration
+        assert res.ledger.comm_times() == 5 + 2 * 20
+
+
+def test_run_seeds_unregistered_runner_falls_back_to_loop(splits):
+    """Runners outside the batched_impl registry still work: run_seeds
+    loops per seed over the runner's cached sessions, asserts ledger
+    byte-identity post hoc, and each seed matches a direct call."""
+    icfg = IterativeConfig(iterations=10)
+
+    def wrapped_vanilla(key, split, extractors, ssl_cfgs, cfg, **kw):
+        return run_vanilla(key, split, extractors, ssl_cfgs, cfg, **kw)
+
+    results = run_seeds(wrapped_vanilla, [jax.random.PRNGKey(s) for s in SEEDS],
                         splits, [_ext() for _ in SEEDS],
                         [_SSL for _ in SEEDS], icfg)
     _assert_ledgers_equal(results[0].ledger, results[1].ledger)
@@ -134,6 +212,24 @@ def test_run_seeds_iterative_fallback_loops_with_identical_ledgers(splits):
                        icfg)
     assert float(results[0].metric) == pytest.approx(float(solo.metric),
                                                      abs=1e-6)
+
+
+def test_run_seeds_heterogeneous_splits_fall_back_to_loop():
+    """Seed sets whose splits don't share one shape take the same loop —
+    even for a registered runner — and the ledger identity still holds
+    when the byte-determining shapes (bs, rep_dim, iterations) agree."""
+    splits = []
+    for s, overlap in zip(SEEDS, (64, 96)):   # n differs; bs=32 both
+        x, y = make_tabular_credit(jax.random.PRNGKey(2000 + s), 700)
+        splits.append(make_vfl_partition(x[:, :22], y, overlap_size=overlap,
+                                         feature_sizes=[11, 11], seed=s))
+    icfg = IterativeConfig(iterations=10)
+    results = run_seeds(run_vanilla, [jax.random.PRNGKey(s) for s in SEEDS],
+                        splits, [_ext() for _ in SEEDS],
+                        [_SSL for _ in SEEDS], icfg)
+    _assert_ledgers_equal(results[0].ledger, results[1].ledger)
+    for res in results:
+        assert res.diagnostics["seed_fold"] == 1   # looped, not folded
 
 
 def test_run_seeds_rejects_per_seed_state_kwargs(splits):
