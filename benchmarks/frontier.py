@@ -13,33 +13,43 @@ over ``--seeds N`` seeds (default 1). The paper's headline claims are
 *statistical* — orderings that hold across runs, not at one seed — so the
 sweep emits one row per (scenario, method, seed) plus, for N > 1, one
 AGGREGATE row per (scenario, method) carrying metric mean/std/min/max.
-Multi-seed runs execute through ``repro.core.protocol.run_seeds``: EVERY
-method folds all seeds into the engine's stacked programs — the protocol
-methods on the vmapped S x K client axis (DESIGN.md §10), the iterative
-baselines as one ``vmap``-of-scan over stacked whole-session carries
-(DESIGN.md §11) — with zero fresh compiled-session builds beyond the
-first seed, so statistical power grows N-fold while wall-clock grows far
-sublinearly.
+
+Execution is GROUPED (DESIGN.md §12): the scenario selection is first
+partitioned by ``scenarios.group_scenarios`` into stackable buckets —
+entries whose party semantics (the engine's ``parties_are_homogeneous``
+predicate, party position by party position), split shapes, and training
+budgets all match — and each group's C scenarios × S seeds go through
+``repro.core.protocol.run_scenarios_seeds`` as ONE folded sweep per
+method: the protocol methods on the vmapped S·C·K client axis (DESIGN.md
+§10), the iterative baselines as one ``vmap``-of-scan over S·C stacked
+whole-session carries (DESIGN.md §11) — with zero fresh compiled-session
+builds beyond each group's first member, so catalog coverage grows while
+wall-clock grows far sublinearly.
 
 Each row records metric (AUC or accuracy), ledger bytes, comm times,
-wall-clock (per-seed rows: the method's sweep wall amortized over seeds),
-and ``cache_misses`` — fresh compiled-session builds the method's whole
-seed sweep triggered (the engine-wide session-cache counters of DESIGN.md
-§9; ``jax.jit`` may still re-specialize a cached session per input shape,
-so this counts trace-level program builds, not individual XLA
-compilations). The blob-level ``session_cache`` field carries the
-per-domain hit/miss totals.
+wall-clock (per-seed rows: the method's whole-GROUP sweep wall amortized
+over its C×S entries), ``group_size`` + ``scenario_fold`` + ``seed_fold``
+(the partitioner's ground truth vs the fold the runner actually
+executed), and ``cache_misses`` — fresh compiled-session builds the
+method's whole group sweep triggered (the engine-wide session-cache
+counters of DESIGN.md §9; ``jax.jit`` may still re-specialize a cached
+session per input shape, so this counts trace-level program builds, not
+individual XLA compilations). The blob-level ``session_cache`` field
+carries the per-domain hit/miss totals and ``groups`` the partition.
 
 CI wiring (.github/workflows/ci.yml, job ``bench-smoke``)::
 
     REPRO_ENGINE_MODE=vmap python -m benchmarks.frontier \
         --smoke --seeds 2 --check-gate
 
-``--smoke`` restricts to the registry's ``smoke``-tagged scenarios at
-CI-tractable sizes; the scheduled nightly tier (ci.yml job
-``bench-frontier-nightly``) runs the full set at ``--seeds 4``.
-``--check-gate`` then enforces the paper's headline ordering on the fresh
-results, per scenario with overlap<=64:
+``--smoke`` runs the FULL registry catalog at CI-tractable smoke sizes
+(grouped execution is what makes that affordable); the scheduled nightly
+tier (ci.yml job ``bench-frontier-nightly``) runs the frontier-tagged set
+at paper sizes with ``--seeds 4``. ``--check-gate`` then enforces the
+paper's headline ordering on the fresh results, per baseline-listed
+scenario with overlap<=64 (dominance claims are pinned per scenario in
+``frontier_baseline.json``; unlisted scenarios get only the invariance
+and fold-discipline checks):
 
 * bytes: one-shot must move >= 100x fewer bytes than iterative (bytes are
   shape-functions — seed-invariant, asserted by run_seeds);
@@ -55,9 +65,12 @@ results, per scenario with overlap<=64:
 * one-shot's ledger bytes must not regress above the recorded baseline.
 
 Under ``REPRO_ENGINE_MODE=vmap`` it additionally requires every one-shot
-AND few-shot per-seed row to have trained on the vmapped engine path, and
+AND few-shot per-seed row to have trained on the vmapped engine path,
 every iterative/fedcvt per-seed row to have run the seed-batched ``scan``
-fold. ``vmap_eligible`` comes from the engine's own homogeneity predicate
+fold, and — on every row — ``seed_fold`` to cover the sweep's seed count
+and ``scenario_fold`` to equal the row's recorded ``group_size`` (the
+grouped sweep must not silently degrade to per-scenario loops).
+``vmap_eligible`` comes from the engine's own homogeneity predicate
 (``engine.parties_are_homogeneous`` — apply-fn identity, not the old
 shape heuristic, which would wrongly gate equal-dim model-zoo scenarios
 whose Python path is legitimate); the scan fold needs no homogeneity, so
@@ -83,7 +96,7 @@ from repro.core import (
     run_one_shot,
     run_vanilla,
 )
-from repro.core.protocol import run_seeds
+from repro.core.protocol import run_scenarios_seeds
 from repro.engine import session_cache_stats, session_cache_stats_by_domain
 
 BASELINE_PATH = os.path.join(os.path.dirname(__file__), "frontier_baseline.json")
@@ -116,11 +129,7 @@ def _aggregate_row(seed_rows) -> dict:
     return row
 
 
-def run_scenario(spec, seeds, smoke: bool, methods=METHODS):
-    """Run every method on one scenario over all ``seeds`` (seed-batched
-    through ``run_seeds``); returns a list of result rows."""
-    bundles = [scenarios.build(spec, seed=s, smoke=smoke) for s in seeds]
-    spec = bundles[0].spec
+def _runner_cfgs(spec) -> dict:
     pcfg = ProtocolConfig(
         client_epochs=spec.budget("client_epochs", 8),
         server_epochs=spec.budget("server_epochs", 30),
@@ -129,18 +138,37 @@ def run_scenario(spec, seeds, smoke: bool, methods=METHODS):
         pcfg = dataclasses.replace(pcfg,
                                    fewshot_threshold=spec.fewshot_threshold)
     icfg = IterativeConfig(iterations=spec.budget("iterations", 300))
-    runner_cfgs = {
+    return {
         "one_shot": (run_one_shot, pcfg),
         "few_shot": (run_few_shot, pcfg),
         "iterative": (run_vanilla, icfg),
         "fedcvt": (run_fedcvt, icfg),
     }
+
+
+def build_bundles(spec, seeds, smoke: bool):
+    """One built bundle per seed of one scenario."""
+    return [scenarios.build(spec, seed=s, smoke=smoke) for s in seeds]
+
+
+def run_scenario_group(bundles_per_scenario, seeds, methods=METHODS):
+    """Run every method on one partitioner GROUP of scenarios over all
+    ``seeds``: each method's whole group — C scenarios × S seeds — goes
+    through ``run_scenarios_seeds`` as ONE folded sweep (DESIGN.md §12;
+    a single scenario is simply the C = 1 width). ``bundles_per_scenario``
+    is the C×S grid of built bundles (``[c][s]``). Returns result rows.
+    """
+    specs = [bs[0].spec for bs in bundles_per_scenario]
+    group_size = len(specs)
+    runner_cfgs = _runner_cfgs(specs[0])
     # the engine's own fast-path precondition: apply-fn identity + equal
     # SSL configs + equal per-party feature shapes. Heterogeneous feature
     # blocks (e.g. credit/feature-skew) — or equal-dim parties with
     # *different* architectures — legitimately take the Python fallback,
-    # so the engine-path gate must skip those rows
-    b0 = bundles[0]
+    # so the engine-path gate must skip those rows. ONE decision per
+    # group: the partitioner's signature makes party semantics uniform
+    # across members, so scenario 0 speaks for all of them
+    b0 = bundles_per_scenario[0][0]
     vmap_eligible = engine.parties_are_homogeneous(
         b0.extractors, b0.ssl_cfgs, [x.shape for x in b0.split.aligned])
     rows = []
@@ -148,47 +176,58 @@ def run_scenario(spec, seeds, smoke: bool, methods=METHODS):
         runner, cfg = runner_cfgs[method]
         t0 = time.time()
         misses0 = session_cache_stats()["misses"]
-        results = run_seeds(runner,
-                            [jax.random.PRNGKey(s) for s in seeds],
-                            [b.split for b in bundles],
-                            [b.extractors for b in bundles],
-                            [b.ssl_cfgs for b in bundles],
-                            cfg)
+        results = run_scenarios_seeds(
+            runner,
+            [[jax.random.PRNGKey(s) for s in seeds] for _ in specs],
+            [[b.split for b in bs] for bs in bundles_per_scenario],
+            [[b.extractors for b in bs] for bs in bundles_per_scenario],
+            [[b.ssl_cfgs for b in bs] for bs in bundles_per_scenario],
+            cfg)
         wall = time.time() - t0
         misses = session_cache_stats()["misses"] - misses0
-        seed_rows = []
-        for seed, res in zip(seeds, results):
-            row = res.summary_row()
-            row.update(
-                scenario=spec.name,
-                seed=seed,
-                method=method,
-                wall_s=round(wall / len(seeds), 2),   # sweep wall, amortized
-                cache_misses=misses,                  # whole-sweep builds
-                vmap_eligible=vmap_eligible,
-                overlap=spec.overlap,
-                num_parties=spec.num_parties,
-                modality=spec.modality,
-            )
-            seed_rows.append(row)
-            print(
-                "{scenario:>18s} {method:>9s} s{seed:<2d} "
-                "{metric_name}={metric:.4f} bytes={comm_bytes:>10d} "
-                "times={comm_times:>6d} ({wall_s:.0f}s)".format(**row),
-                flush=True,
-            )
-        rows.extend(seed_rows)
-        if len(seed_rows) > 1:
-            agg = _aggregate_row(seed_rows)
-            rows.append(agg)
-            print(
-                "{scenario:>18s} {method:>9s} agg "
-                "{metric_name}={metric_mean:.4f}±{metric_std:.4f} "
-                "[{metric_min:.4f}, {metric_max:.4f}] "
-                "({wall_s:.0f}s total)".format(**agg),
-                flush=True,
-            )
+        for spec, scen_results in zip(specs, results):
+            seed_rows = []
+            for seed, res in zip(seeds, scen_results):
+                row = res.summary_row()
+                row.update(
+                    scenario=spec.name,
+                    seed=seed,
+                    method=method,
+                    # whole-GROUP sweep wall, amortized per (scenario, seed)
+                    wall_s=round(wall / (len(seeds) * group_size), 2),
+                    cache_misses=misses,          # whole-group fresh builds
+                    group_size=group_size,        # partitioner ground truth
+                    vmap_eligible=vmap_eligible,
+                    overlap=spec.overlap,
+                    num_parties=spec.num_parties,
+                    modality=spec.modality,
+                )
+                seed_rows.append(row)
+                print(
+                    "{scenario:>18s} {method:>9s} s{seed:<2d} "
+                    "{metric_name}={metric:.4f} bytes={comm_bytes:>10d} "
+                    "times={comm_times:>6d} ({wall_s:.0f}s)".format(**row),
+                    flush=True,
+                )
+            rows.extend(seed_rows)
+            if len(seed_rows) > 1:
+                agg = _aggregate_row(seed_rows)
+                rows.append(agg)
+                print(
+                    "{scenario:>18s} {method:>9s} agg "
+                    "{metric_name}={metric_mean:.4f}±{metric_std:.4f} "
+                    "[{metric_min:.4f}, {metric_max:.4f}] "
+                    "({wall_s:.0f}s total)".format(**agg),
+                    flush=True,
+                )
     return rows
+
+
+def run_scenario(spec, seeds, smoke: bool, methods=METHODS):
+    """Run every method on ONE scenario over all ``seeds`` — the width-1
+    group case of :func:`run_scenario_group`."""
+    return run_scenario_group([build_bundles(spec, seeds, smoke)], seeds,
+                              methods=methods)
 
 
 def _check_margins(name: str, method_rows: dict, its: dict, label: str,
@@ -269,6 +308,19 @@ def check_gate(rows, baseline_path: str = BASELINE_PATH) -> list:
                     f"fell back to the per-seed loop instead of the "
                     f"DESIGN.md §10-11 fold"
                 )
+            # ... and scenario_fold must cover the row's whole partitioner
+            # group: group_size is the ground truth the bench recorded, so
+            # a mismatch means the grouped sweep silently degraded to the
+            # per-scenario loop (e.g. a shape drift broke the stack)
+            gsize = r.get("group_size")
+            if gsize is not None and r.get("scenario_fold") != gsize:
+                problems.append(
+                    f"{r['scenario']} seed {r['seed']}: {r['method']} ran "
+                    f"scenario_fold={r.get('scenario_fold')} against a "
+                    f"size-{gsize} group — the grouped sweep fell back to "
+                    f"the per-scenario loop instead of the DESIGN.md §12 "
+                    f"fold"
+                )
 
     for name in scenario_names:
         ones = {r["seed"]: r for r in per_seed
@@ -280,13 +332,20 @@ def check_gate(rows, baseline_path: str = BASELINE_PATH) -> list:
         if not ones:
             continue
         one0 = next(iter(ones.values()))
-        base = baseline.get(name, {})
         one_bytes = {r["comm_bytes"] for r in ones.values()}
         if len(one_bytes) != 1:
             problems.append(
                 f"{name}: one-shot bytes differ across seeds "
                 f"{sorted(one_bytes)} — communication must be seed-invariant"
             )
+        # dominance claims (bytes ratio + margins + bytes regression) are
+        # pinned per scenario in the baseline file: scenarios without an
+        # entry — e.g. the full smoke catalog's image/credit rows, whose
+        # iteration budgets make no 100x bytes claim — only get the
+        # seed-invariance and fold-discipline checks above
+        base = baseline.get(name)
+        if base is None:
+            continue
         if base.get("one_shot_bytes") is not None \
                 and one0["comm_bytes"] > base["one_shot_bytes"]:
             problems.append(
@@ -319,7 +378,9 @@ def check_gate(rows, baseline_path: str = BASELINE_PATH) -> list:
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--smoke", action="store_true", help="smoke-tagged scenarios only")
+    ap.add_argument("--smoke", action="store_true",
+                    help="the full catalog at CI-tractable smoke sizes "
+                    "(grouped execution, DESIGN.md §12)")
     ap.add_argument("--seed", type=int, default=0, help="first seed")
     ap.add_argument(
         "--seeds",
@@ -347,20 +408,30 @@ def main(argv=None) -> int:
     if args.scenarios:
         specs = [scenarios.get(n) for n in args.scenarios]
     elif args.smoke:
-        specs = scenarios.by_tag("smoke")
+        # the FULL catalog at smoke sizes: grouped execution (DESIGN.md
+        # §12) is what makes every-scenario coverage affordable per-PR —
+        # each stackable family compiles once, not once per scenario
+        specs = [scenarios.get(n) for n in scenarios.names()]
     else:
         specs = scenarios.by_tag("frontier")
     seeds = list(range(args.seed, args.seed + args.seeds))
 
     t0 = time.time()
+    bundles = [build_bundles(spec, seeds, smoke=args.smoke) for spec in specs]
+    groups = scenarios.group_scenarios(
+        [(bs[0].spec, bs[0]) for bs in bundles])
+    for g in groups:
+        print(f"group[{g.size}]: {', '.join(g.names)}", flush=True)
     rows = []
-    for spec in specs:
-        rows.extend(run_scenario(spec, seeds, smoke=args.smoke))
+    for g in groups:
+        rows.extend(run_scenario_group([bundles[i] for i in g.indices],
+                                       seeds))
 
     blob = {
         "mode": "smoke" if args.smoke else "full",
         "seed": args.seed,
         "seeds": seeds,
+        "groups": [{"scenarios": g.names, "size": g.size} for g in groups],
         "wall_s": round(time.time() - t0, 2),
         "session_cache": session_cache_stats_by_domain(),
         "rows": rows,

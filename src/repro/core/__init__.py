@@ -2,7 +2,7 @@
 from repro.core.comm import CommLedger
 from repro.core.protocol import (ProtocolConfig, VFLResult, run_few_shot,
                                  run_few_shot_finetune, run_one_shot,
-                                 run_seeds)
+                                 run_scenarios_seeds, run_seeds)
 from repro.core.baselines import (IterativeConfig, run_fedbcd,
                                   run_fedbcd_seeds, run_fedcvt,
                                   run_fedcvt_seeds, run_vanilla,
@@ -19,6 +19,7 @@ __all__ = [
     "run_few_shot",
     "run_few_shot_finetune",
     "run_seeds",
+    "run_scenarios_seeds",
     "run_vanilla",
     "run_vanilla_seeds",
     "run_fedbcd",

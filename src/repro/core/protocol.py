@@ -16,9 +16,13 @@ scenario point through the exchanges together, folding the heavy compute
 (S·K local-SSL sessions, S·K k-means runs, S server fits) into stacked
 compiled programs while reproducing each seed's exact single-seed PRNG
 stream host-side. The public single-seed runners are the S = 1 case of the
-same code; ``run_seeds`` is the multi-seed entry point. Communication is a
-function of shapes only, so the ledger is produced host-side once and
-asserted byte-identical across seeds.
+same code; ``run_seeds`` is the multi-seed entry point, and
+``run_scenarios_seeds`` extends the very same fold along the *scenario*
+axis (DESIGN.md §12): a group of shape-homogeneous scenarios flattens
+scenario-major into the identical ``*_seeds`` impls, so C scenarios × S
+seeds train as one stacked program under unchanged session-cache keys.
+Communication is a function of shapes only, so the ledger is produced
+host-side once and asserted byte-identical across seeds.
 """
 from __future__ import annotations
 
@@ -91,7 +95,7 @@ class VFLResult:
             "comm_bytes": int(self.ledger.total_bytes()),
             "comm_times": int(self.ledger.comm_times()),
         }
-        for k in ("iterations", "engine_path", "seed_fold"):
+        for k in ("iterations", "engine_path", "seed_fold", "scenario_fold"):
             if k in self.diagnostics:
                 row[k] = self.diagnostics[k]
         return row
@@ -552,6 +556,128 @@ def _assert_ledgers_identical(ledgers: Sequence[CommLedger]) -> None:
                 f"bytes)")
 
 
+def _batched_impls() -> dict:
+    from repro.core import baselines   # deferred: baselines imports protocol
+
+    return {
+        run_one_shot: _one_shot_seeds,
+        run_few_shot: _few_shot_seeds,
+        run_few_shot_finetune: _few_shot_finetune_seeds,
+        baselines.run_vanilla: baselines.run_vanilla_seeds,
+        baselines.run_fedcvt: baselines.run_fedcvt_seeds,
+        baselines.run_fedbcd: baselines.run_fedbcd_seeds,
+    }
+
+
+def _reject_stateful_kwargs(entry: str, runner_kwargs: dict) -> None:
+    stateful = sorted({"clients", "server", "ledger", "clients_per_seed",
+                       "servers"} & set(runner_kwargs))
+    if stateful:
+        raise ValueError(
+            f"{entry} does not accept per-seed state kwargs {stateful}: "
+            f"one object cannot serve every seed (and the heterogeneous-"
+            f"splits fallback loop cannot thread per-seed state) — call "
+            f"the runner or its *_seeds entry directly instead")
+
+
+def _run_one_scenario_seeds(runner, impl, keys, splits, extractors, ssl_cfgs,
+                            cfg, **runner_kwargs) -> List[VFLResult]:
+    """One scenario's S seeds when the cross-scenario fold doesn't apply:
+    seed-batched when the runner has a registered ``*_seeds`` impl and the
+    seeds share one shape, else a per-seed loop over the runner's cached
+    sessions (with the ledger byte-identity asserted post hoc)."""
+    num_seeds = len(keys)
+    if impl is not None and _splits_are_homogeneous(splits):
+        results = impl(list(keys), list(splits), list(extractors),
+                       list(ssl_cfgs), cfg, **runner_kwargs)
+        if num_seeds > 1:       # the shared prototype ledger → per-seed copies
+            for res in results:
+                res.ledger = _copy_ledger(res.ledger)
+    else:
+        results = [runner(k, sp, ex, sc, cfg, **runner_kwargs)
+                   for k, sp, ex, sc in zip(keys, splits, extractors,
+                                            ssl_cfgs)]
+        _assert_ledgers_identical([r.ledger for r in results])
+    for res in results:
+        res.diagnostics.setdefault("scenario_fold", 1)
+    return results
+
+
+def run_scenarios_seeds(
+    runner,
+    keys: Sequence[Sequence[jax.Array]],
+    splits: Sequence[Sequence[VerticalSplit]],
+    extractors: Sequence[Sequence[Sequence[Model]]],
+    ssl_cfgs: Sequence[Sequence[Sequence[SSLConfig]]],
+    cfg=None,
+    **runner_kwargs,
+) -> List[List[VFLResult]]:
+    """Run C grouped scenarios × S seeds as ONE folded sweep (DESIGN.md
+    §12). Arguments are rectangular C×S grids (``keys[c][s]`` …); returns
+    the results on the same grid.
+
+    The batch axis of every seed-batched runner is *anonymous* — nothing
+    in the stacked programs distinguishes "seed s" from "scenario c, seed
+    s" — so a group of scenarios whose splits share one shape signature
+    flattens scenario-major into the registered ``*_seeds`` impl exactly
+    like extra seeds: one vmapped S·C·K local-SSL session, one folded
+    step-③ k-means, seed×scenario-batched server fits (or, for the
+    iterative baselines, one ``vmap``-of-scan over S·C stacked carries).
+    Session-cache keys never contain the batch width, so a C ≥ 2 fold
+    against a warm single-scenario cache adds ZERO fresh session builds
+    (tests/test_scenario_batched.py pins this, along with fold ≡
+    per-scenario-loop parity at 1e-5).
+
+    Each result's ``diagnostics["seed_fold"]`` / ``["scenario_fold"]``
+    record the fold actually run (S and C on the folded path). Grids whose
+    flat splits are NOT shape-homogeneous — or unregistered runners — fall
+    back to the per-scenario path (``scenario_fold`` 1), which itself
+    seed-batches where it can; :func:`run_seeds` is precisely the C = 1
+    case. Ledgers are per-(scenario, seed) copies; byte-identity across
+    the whole flat batch is asserted at every exchange on the folded path.
+    Per-seed *state* kwargs are rejected exactly as in :func:`run_seeds`.
+    """
+    num_scenarios = len(keys)
+    if not (len(splits) == len(extractors) == len(ssl_cfgs)
+            == num_scenarios):
+        raise ValueError("run_scenarios_seeds needs one per-seed list of "
+                         "keys / splits / extractor stacks / ssl-cfg lists "
+                         "per scenario")
+    if num_scenarios == 0:
+        return []
+    num_seeds = len(keys[0])
+    for c in range(num_scenarios):
+        if not (len(keys[c]) == len(splits[c]) == len(extractors[c])
+                == len(ssl_cfgs[c]) == num_seeds):
+            raise ValueError(
+                "run_scenarios_seeds needs a rectangular C×S grid: every "
+                "scenario must carry the same per-seed list lengths")
+    _reject_stateful_kwargs("run_scenarios_seeds", runner_kwargs)
+    impl = _batched_impls().get(runner)
+    flat_splits = [sp for row in splits for sp in row]
+    if impl is not None and num_scenarios > 1 \
+            and _splits_are_homogeneous(flat_splits):
+        flat_keys = [k for row in keys for k in row]
+        flat_ext = [e for row in extractors for e in row]
+        flat_ssl = [s for row in ssl_cfgs for s in row]
+        results = impl(flat_keys, flat_splits, flat_ext, flat_ssl, cfg,
+                       **runner_kwargs)
+        if len(results) > 1:    # the shared prototype ledger → per-entry copies
+            for res in results:
+                res.ledger = _copy_ledger(res.ledger)
+        for res in results:
+            # the impl counted the flat width as its seed fold; report the
+            # grid's true factorization instead
+            res.diagnostics["seed_fold"] = num_seeds
+            res.diagnostics["scenario_fold"] = num_scenarios
+        return [results[c * num_seeds:(c + 1) * num_seeds]
+                for c in range(num_scenarios)]
+    return [_run_one_scenario_seeds(runner, impl, list(keys[c]),
+                                    list(splits[c]), list(extractors[c]),
+                                    list(ssl_cfgs[c]), cfg, **runner_kwargs)
+            for c in range(num_scenarios)]
+
+
 def run_seeds(
     runner,
     keys: Sequence[jax.Array],
@@ -561,7 +687,8 @@ def run_seeds(
     cfg=None,
     **runner_kwargs,
 ) -> List[VFLResult]:
-    """Run one scenario point over S seeds (DESIGN.md §10-11).
+    """Run one scenario point over S seeds (DESIGN.md §10-11) — the C = 1
+    case of :func:`run_scenarios_seeds`, under the same session-cache keys.
 
     EVERY registered runner executes seed-BATCHED: the protocol runners
     (``run_one_shot`` / ``run_few_shot`` / ``run_few_shot_finetune``) fold
@@ -590,36 +717,11 @@ def run_seeds(
     directly for stateful single-seed composition. Returns one
     ``VFLResult`` per seed.
     """
-    from repro.core import baselines   # deferred: baselines imports protocol
-
     num_seeds = len(keys)
     if not (len(splits) == len(extractors) == len(ssl_cfgs) == num_seeds):
         raise ValueError("run_seeds needs one split / extractor stack / "
                          "ssl-cfg list per seed")
-    stateful = sorted({"clients", "server", "ledger", "clients_per_seed",
-                       "servers"} & set(runner_kwargs))
-    if stateful:
-        raise ValueError(
-            f"run_seeds does not accept per-seed state kwargs {stateful}: "
-            f"one object cannot serve every seed (and the heterogeneous-"
-            f"splits fallback loop cannot thread per-seed state) — call "
-            f"the runner or its *_seeds entry directly instead")
-    batched_impl = {
-        run_one_shot: _one_shot_seeds,
-        run_few_shot: _few_shot_seeds,
-        run_few_shot_finetune: _few_shot_finetune_seeds,
-        baselines.run_vanilla: baselines.run_vanilla_seeds,
-        baselines.run_fedcvt: baselines.run_fedcvt_seeds,
-        baselines.run_fedbcd: baselines.run_fedbcd_seeds,
-    }.get(runner)
-    if batched_impl is not None and _splits_are_homogeneous(splits):
-        results = batched_impl(list(keys), list(splits), list(extractors),
-                               list(ssl_cfgs), cfg, **runner_kwargs)
-        if num_seeds > 1:       # the shared prototype ledger → per-seed copies
-            for res in results:
-                res.ledger = _copy_ledger(res.ledger)
-        return results
-    results = [runner(k, sp, ex, sc, cfg, **runner_kwargs)
-               for k, sp, ex, sc in zip(keys, splits, extractors, ssl_cfgs)]
-    _assert_ledgers_identical([r.ledger for r in results])
-    return results
+    _reject_stateful_kwargs("run_seeds", runner_kwargs)
+    return run_scenarios_seeds(runner, [list(keys)], [list(splits)],
+                               [list(extractors)], [list(ssl_cfgs)], cfg,
+                               **runner_kwargs)[0]

@@ -31,6 +31,15 @@ exact per-seed keys/schedules the single-seed path would have consumed, so
 ``core.protocol.run_seeds`` matches a Python loop of single-seed runs at
 atol 1e-5 (bit-exact on CPU for the k-means and fit folds).
 
+The batch axis is fully ANONYMOUS: "seed" never appears inside a fold, so
+any flat list of shape-homogeneous entries may ride it. DESIGN.md §12
+exploits exactly this — ``core.protocol.run_scenarios_seeds`` flattens C
+grouped scenarios × S seeds scenario-major into these same entry points,
+turning a whole frontier group into one stacked S·C·K program with zero
+new engine code and zero new session-cache keys (the keys carry neither
+batch width nor data shapes, so a C ≥ 2 fold against a warm C = 1 cache
+compiles nothing fresh at the session level).
+
 Heterogeneous shapes (per-party feature dims, ragged gradient dims) and
 the Pallas kernel path (``pallas_call`` does not support interpret-mode
 ``vmap``) fall back to per-entry execution — same numerics, no fold.

@@ -289,11 +289,17 @@ def build_unaligned_schedule(seed: int, pool_sizes: Sequence[int],
                              batch_size: int, iterations: int
                              ) -> Tuple[jnp.ndarray, ...]:
     """Per-party (S, bs) uniform draws from each private pool (FedCVT's
-    unaligned batches)."""
+    unaligned batches). An EMPTY pool (a full-overlap party) yields
+    zero-width (S, 0) rows — the step's masked unaligned term then sums
+    over nothing and contributes exactly 0, mirroring the SSL engine's
+    ``n_unlabeled == 0`` guard (regression: the full-catalog smoke runs
+    fedcvt on edge/full-overlap)."""
     rng = np.random.RandomState(seed)
-    return tuple(jnp.asarray(rng.randint(0, n_u, size=(iterations, batch_size)),
-                             jnp.int32)
-                 for n_u in pool_sizes)
+    return tuple(
+        jnp.zeros((iterations, 0), jnp.int32) if n_u == 0
+        else jnp.asarray(rng.randint(0, n_u, size=(iterations, batch_size)),
+                         jnp.int32)
+        for n_u in pool_sizes)
 
 
 # ---------------------------------------------------------------- sessions

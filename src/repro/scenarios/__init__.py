@@ -13,14 +13,22 @@ from repro.scenarios.registry import (
     register,
 )
 from repro.scenarios import catalog  # noqa: F401  (registers the catalog)
+from repro.scenarios.grouping import (
+    ScenarioGroup,
+    fold_signature,
+    group_scenarios,
+)
 
 __all__ = [
     "GENERATORS",
     "ScenarioBundle",
+    "ScenarioGroup",
     "ScenarioSpec",
     "build",
     "by_tag",
+    "fold_signature",
     "get",
+    "group_scenarios",
     "names",
     "register",
 ]

@@ -1,0 +1,177 @@
+"""Scenario-group partitioner for the scenario-axis fold (DESIGN.md §12).
+
+The seed-batched runners (DESIGN.md §10-11) treat the batch axis as
+*anonymous*: nothing in the stacked programs knows an entry is "seed s" —
+so any set of (scenario, seed) pairs whose entries share one shape and one
+party semantics can ride the same axis. This module decides which catalog
+entries may share it.
+
+Two scenarios are *stackable* when, party position by party position, the
+engine's own vmap precondition (:func:`repro.engine.parties_are_homogeneous`
+— apply-fn identity + equal rep_dim + equal SSLConfig + equal feature
+dims) holds across the pair, AND their built splits share every shape and
+the class count, AND their training budgets match (the frontier compiles
+one config per group). Note the *within*-scenario predicate is NOT
+required: a party-heterogeneous scenario like the (10, 13)-feature credit
+family folds across scenarios at the orchestration level — each flat entry
+still takes its own engine path inside the fold.
+
+``fold_signature`` is the hashable image of that relation; ``partition``
+buckets signatures deterministically (first-occurrence order, ``None``
+signatures become singletons); ``group_scenarios`` combines the two and
+re-verifies every multi-member bucket with the engine predicate itself, so
+a signature collision can only ever split a group, never merge a wrong
+one.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Hashable, List, Optional, Sequence, Tuple
+
+from repro.engine import parties_are_homogeneous, sessions
+from repro.scenarios.registry import ScenarioBundle, ScenarioSpec
+
+
+def split_signature(split) -> tuple:
+    """Full shape signature of a built vertical split — the stacking
+    precondition on the data side (matches the one ``run_seeds`` checks)."""
+    return (tuple(x.shape for x in split.aligned),
+            tuple(x.shape for x in split.unaligned),
+            tuple(x.shape for x in split.test_aligned),
+            split.labels.shape, split.test_labels.shape, split.num_classes)
+
+
+def _closure_key(fn) -> tuple:
+    """Code-object + hashable-closure-cell identity of a function — the
+    same discipline as ``sessions.model_key``, applied here to ``init``
+    factories (un-hashable cells get a fresh token: conservative
+    singleton, never a wrong merge)."""
+    cells = []
+    for c in (getattr(fn, "__closure__", None) or ()):
+        v = c.cell_contents
+        try:
+            hash(v)
+            cells.append(v)
+        except TypeError:
+            cells.append(object())
+    return (getattr(fn, "__code__", None), tuple(cells))
+
+
+def _init_fns_match(a, b) -> bool:
+    """True when two param-init factories provably agree (same function,
+    or same code with equal captured closure values) — the widths an
+    ``apply`` generic over its params dict doesn't expose live here."""
+    fa, fb = a.init, b.init
+    if fa is fb:
+        return True
+    if getattr(fa, "__code__", None) is not getattr(fb, "__code__", False):
+        return False
+    try:
+        return bool(
+            [c.cell_contents for c in (fa.__closure__ or ())]
+            == [c.cell_contents for c in (fb.__closure__ or ())])
+    except Exception:
+        return False
+
+
+def fold_signature(spec: ScenarioSpec,
+                   bundle: ScenarioBundle) -> Optional[Hashable]:
+    """Hashable stack key of one built scenario: equal signatures ⇒ the
+    entries may share one folded batch axis. Party-wise ``model_key`` is
+    the hashable proxy for the engine's apply-fn identity (equal keys ⇒
+    ``_apply_fns_match``), and the ``init`` factory's closure key carries
+    the architecture widths a params-generic ``apply`` doesn't expose —
+    the fold stacks *parameter carries*, so the shapes ``init`` produces
+    must agree too. Un-digestable closures get fresh tokens (conservative
+    singleton). Returns ``None`` when the key isn't hashable — those
+    entries never group."""
+    sig = (
+        tuple((sessions.model_key(ext), _closure_key(ext.init), cfg)
+              for ext, cfg in zip(bundle.extractors, bundle.ssl_cfgs)),
+        split_signature(bundle.split),
+        spec.budgets,
+        spec.fewshot_threshold,
+    )
+    try:
+        hash(sig)
+    except TypeError:
+        return None
+    return sig
+
+
+def partition(signatures: Sequence[Optional[Hashable]]) -> List[List[int]]:
+    """Deterministic order-preserving partition of indices by signature:
+    groups appear in first-occurrence order, members keep input order, and
+    a ``None`` signature always falls out as its own singleton."""
+    groups: List[List[int]] = []
+    by_sig: dict = {}
+    for i, sig in enumerate(signatures):
+        if sig is None:
+            groups.append([i])
+            continue
+        bucket = by_sig.get(sig)
+        if bucket is None:
+            bucket = []
+            by_sig[sig] = bucket
+            groups.append(bucket)
+        bucket.append(i)
+    return groups
+
+
+def bundles_fold_compatible(a: ScenarioBundle, b: ScenarioBundle) -> bool:
+    """The engine predicate applied *across* two scenarios, party position
+    by party position — ground truth behind :func:`fold_signature`."""
+    if len(a.extractors) != len(b.extractors):
+        return False
+    if split_signature(a.split) != split_signature(b.split):
+        return False
+    return all(
+        parties_are_homogeneous(
+            [ea, eb], [ca, cb],
+            [xa.shape, xb.shape])
+        and _init_fns_match(ea, eb)
+        for ea, eb, ca, cb, xa, xb in zip(
+            a.extractors, b.extractors, a.ssl_cfgs, b.ssl_cfgs,
+            a.split.aligned, b.split.aligned))
+
+
+@dataclass
+class ScenarioGroup:
+    """One stackable bucket of catalog entries (indices into the input
+    entry list, in input order). ``size == 1`` is the width-1 case — it
+    runs through the very same folded path."""
+
+    indices: List[int]
+    names: List[str]
+    signature: Optional[Hashable]
+
+    @property
+    def size(self) -> int:
+        return len(self.indices)
+
+
+def group_scenarios(
+    entries: Sequence[Tuple[ScenarioSpec, ScenarioBundle]],
+) -> List[ScenarioGroup]:
+    """Partition built scenarios into stackable groups.
+
+    Buckets by :func:`fold_signature`, then re-verifies every multi-member
+    bucket against its first member with :func:`bundles_fold_compatible`
+    (the engine predicate itself); an entry that fails verification is
+    demoted to a singleton appended after its would-be group, so a
+    signature bug can only cost fold width, never correctness.
+    """
+    sigs = [fold_signature(spec, bundle) for spec, bundle in entries]
+    groups: List[ScenarioGroup] = []
+    for idxs in partition(sigs):
+        head = entries[idxs[0]][1]
+        kept = [i for i in idxs
+                if i == idxs[0] or bundles_fold_compatible(entries[i][1], head)]
+        demoted = [i for i in idxs if i not in kept]
+        for members, sig in ([(kept, sigs[idxs[0]])]
+                             + [([i], None) for i in demoted]):
+            groups.append(ScenarioGroup(
+                indices=list(members),
+                names=[entries[i][0].name for i in members],
+                signature=sig))
+    return groups

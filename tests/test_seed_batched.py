@@ -320,6 +320,26 @@ def test_full_overlap_scenario_registered_and_runs():
     assert few.diagnostics["fewshot_gate_rate"] == [0.0, 0.0]
 
 
+def test_fedcvt_empty_private_pool_trains_without_crash():
+    """FedCVT on a full-overlap scenario: ``build_unaligned_schedule``
+    historically crashed on an empty pool (``randint(0, 0)``); it must
+    yield zero-width unaligned batches instead, whose masked pseudo-label
+    term contributes exactly 0 (the full-catalog grouped smoke runs
+    fedcvt on edge/full-overlap, so this is now a bench-critical path)."""
+    from repro import scenarios
+    from repro.engine import iterative
+
+    scheds = iterative.build_unaligned_schedule(
+        seed=0, pool_sizes=(0, 500), batch_size=32, iterations=5)
+    assert scheds[0].shape == (5, 0)
+    assert scheds[1].shape == (5, 32)
+
+    bundle = scenarios.build("edge/full-overlap", seed=0, smoke=True)
+    res = run_fedcvt(jax.random.PRNGKey(0), bundle.split, bundle.extractors,
+                     bundle.ssl_cfgs, IterativeConfig(iterations=5))
+    assert np.isfinite(float(res.metric))
+
+
 def test_parties_are_homogeneous_is_not_a_shape_heuristic():
     """The spec-level predicate must track the engine's real precondition:
     equal feature dims with DIFFERENT forward functions are heterogeneous
