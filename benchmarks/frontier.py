@@ -88,14 +88,9 @@ import time
 import jax
 
 from repro import engine, scenarios
-from repro.core import (
-    IterativeConfig,
-    ProtocolConfig,
-    run_fedcvt,
-    run_few_shot,
-    run_one_shot,
-    run_vanilla,
-)
+from repro.core import IterativeConfig, ProtocolConfig
+from repro.core import rows as result_rows
+from repro.core import runners as runner_registry
 from repro.core.protocol import run_scenarios_seeds
 from repro.engine import session_cache_stats, session_cache_stats_by_domain
 
@@ -129,7 +124,10 @@ def _aggregate_row(seed_rows) -> dict:
     return row
 
 
-def _runner_cfgs(spec) -> dict:
+def _runner_cfgs(spec, methods=METHODS) -> dict:
+    """Resolve every method through THE runner registry
+    (``repro.core.runners``): the entry supplies the runner callable, its
+    ``kind`` picks the config family the scenario budgets parameterize."""
     pcfg = ProtocolConfig(
         client_epochs=spec.budget("client_epochs", 8),
         server_epochs=spec.budget("server_epochs", 30),
@@ -138,12 +136,10 @@ def _runner_cfgs(spec) -> dict:
         pcfg = dataclasses.replace(pcfg,
                                    fewshot_threshold=spec.fewshot_threshold)
     icfg = IterativeConfig(iterations=spec.budget("iterations", 300))
-    return {
-        "one_shot": (run_one_shot, pcfg),
-        "few_shot": (run_few_shot, pcfg),
-        "iterative": (run_vanilla, icfg),
-        "fedcvt": (run_fedcvt, icfg),
-    }
+    cfg_by_kind = {"protocol": pcfg, "iterative": icfg}
+    return {m: (runner_registry.get(m).runner,
+                cfg_by_kind[runner_registry.get(m).kind])
+            for m in methods}
 
 
 def build_bundles(spec, seeds, smoke: bool):
@@ -160,7 +156,7 @@ def run_scenario_group(bundles_per_scenario, seeds, methods=METHODS):
     """
     specs = [bs[0].spec for bs in bundles_per_scenario]
     group_size = len(specs)
-    runner_cfgs = _runner_cfgs(specs[0])
+    runner_cfgs = _runner_cfgs(specs[0], methods)
     # the engine's own fast-path precondition: apply-fn identity + equal
     # SSL configs + equal per-party feature shapes. Heterogeneous feature
     # blocks (e.g. credit/feature-skew) — or equal-dim parties with
@@ -188,8 +184,10 @@ def run_scenario_group(bundles_per_scenario, seeds, methods=METHODS):
         for spec, scen_results in zip(specs, results):
             seed_rows = []
             for seed, res in zip(seeds, scen_results):
-                row = res.summary_row()
-                row.update(
+                # the one typed row builder every gate consumes
+                # (repro.core.rows): summary_row() context rides along here
+                row = result_rows.training_row(
+                    res,
                     scenario=spec.name,
                     seed=seed,
                     method=method,

@@ -1,3 +1,16 @@
 from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint, latest_step
+from repro.checkpoint.artifact import (ARTIFACT_VERSION, ExtractorSpec,
+                                       TrainedVFLModel, extractor_specs_for,
+                                       load_artifact, save_artifact)
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+__all__ = [
+    "save_checkpoint",
+    "load_checkpoint",
+    "latest_step",
+    "ARTIFACT_VERSION",
+    "ExtractorSpec",
+    "TrainedVFLModel",
+    "extractor_specs_for",
+    "save_artifact",
+    "load_artifact",
+]

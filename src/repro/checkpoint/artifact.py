@@ -1,0 +1,304 @@
+"""The trained-VFL deployment artifact (DESIGN.md §13).
+
+The paper's headline is that ~1-2 communication rounds train a *deployable*
+joint model; this module is the layer that makes every runner's output an
+actual deployment unit. A :class:`TrainedVFLModel` is a typed, versioned
+record of everything online serving needs — per-party extractor parameters
+plus their *apply identity* (a declarative :class:`ExtractorSpec`, the same
+record ``repro.scenarios`` builds party stacks from, so a reloaded artifact
+provably reconstructs the trained forward function), the server's joint
+classifier head, the source :class:`ScenarioSpec` name and
+``ProtocolConfig`` for provenance, and (optionally) the final overlap
+representations H_o that few-shot-style missing-party estimation attends
+over at inference time (Eq. 10 — *representations*, never raw features, so
+the artifact ships exactly what the server already held during training).
+
+Persistence rides on ``checkpoint/ckpt.py``: parameters and overlap reps
+are the checkpoint pytree, everything declarative travels in the
+JSON metadata entry, and loading rebuilds the template from the specs alone
+— no pickles, no code objects on disk.
+
+    art = result.to_artifact(spec, cfg, split=split)     # any VFLResult
+    save_artifact("artifacts/hard32", art)
+    art2 = load_artifact("artifacts/hard32")
+    logits = art2.predict_logits([x_party0, x_party1])   # reference forward
+
+``repro.launch.vfl_serve`` wraps the loaded artifact in a batched fused
+forward for continuous traffic; ``predict_logits`` here is the unbatched
+reference oracle that serving parity is pinned against.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
+from repro.engine.local_ssl import PartyParams
+from repro.models.extractors import (Model, make_classifier,
+                                     make_cnn_extractor, make_mlp_extractor)
+
+ARTIFACT_VERSION = 1
+_ARTIFACT_STEP = 0          # ckpt step slot: one artifact per directory
+
+
+@dataclass(frozen=True)
+class ExtractorSpec:
+    """Declarative apply identity of one party's extractor: the factory and
+    the arguments that rebuild the exact forward function. Two equal specs
+    build Models whose apply fns share code object and closure values — the
+    same guarantee ``engine.sessions.model_key`` keys compiled sessions on."""
+
+    kind: str                              # "mlp" | "cnn"
+    rep_dim: int
+    hidden: Tuple[int, ...] = ()           # mlp widths
+    widths: Tuple[int, ...] = ()           # cnn stage widths
+    blocks_per_stage: int = 1              # cnn depth
+
+    def build(self) -> Model:
+        if self.kind == "mlp":
+            return make_mlp_extractor(rep_dim=self.rep_dim,
+                                      hidden=self.hidden)
+        if self.kind == "cnn":
+            return make_cnn_extractor(rep_dim=self.rep_dim,
+                                      widths=self.widths,
+                                      blocks_per_stage=self.blocks_per_stage)
+        raise ValueError(f"unknown extractor kind {self.kind!r} "
+                         f"(artifact from a newer repo version?)")
+
+    def to_meta(self) -> dict:
+        return {"kind": self.kind, "rep_dim": self.rep_dim,
+                "hidden": list(self.hidden), "widths": list(self.widths),
+                "blocks_per_stage": self.blocks_per_stage}
+
+    @staticmethod
+    def from_meta(meta: dict) -> "ExtractorSpec":
+        return ExtractorSpec(kind=meta["kind"], rep_dim=meta["rep_dim"],
+                             hidden=tuple(meta["hidden"]),
+                             widths=tuple(meta["widths"]),
+                             blocks_per_stage=meta["blocks_per_stage"])
+
+
+def extractor_specs_for(scenario_spec) -> Tuple[ExtractorSpec, ...]:
+    """The per-party extractor specs a :class:`ScenarioSpec` implies — the
+    ONE place the scenario→architecture mapping is written down
+    (``repro.scenarios.registry`` builds its party stacks from these, so an
+    artifact's specs are exactly what trained)."""
+    if scenario_spec.modality == "image":
+        spec = ExtractorSpec(kind="cnn", rep_dim=scenario_spec.rep_dim,
+                             widths=tuple(scenario_spec.widths),
+                             blocks_per_stage=scenario_spec.blocks_per_stage)
+    else:
+        spec = ExtractorSpec(kind="mlp", rep_dim=scenario_spec.rep_dim,
+                             hidden=tuple(scenario_spec.hidden))
+    return (spec,) * scenario_spec.num_parties
+
+
+@dataclass
+class TrainedVFLModel:
+    """A deployable K-party VFL model: the typed serving contract.
+
+    Parameters are live pytrees; everything else is declarative (JSON-safe)
+    so ``save_artifact``/``load_artifact`` round-trip through
+    ``checkpoint/ckpt.py`` without serializing code."""
+
+    scenario: str                                  # source ScenarioSpec name
+    num_classes: int
+    feature_shapes: Tuple[Tuple[int, ...], ...]    # per-party trailing shape
+    extractor_specs: Tuple[ExtractorSpec, ...]
+    client_params: List[PartyParams]               # per-party (extractor, head)
+    server_params: Any                             # joint classifier θ_c
+    protocol: Dict[str, Any] = field(default_factory=dict)  # ProtocolConfig
+    overlap_reps: Optional[List[jnp.ndarray]] = None   # H_o per party (Eq. 10)
+    metric_name: str = ""
+    metric: float = 0.0
+    version: int = ARTIFACT_VERSION
+
+    def __post_init__(self):
+        k = len(self.extractor_specs)
+        if not (len(self.client_params) == len(self.feature_shapes) == k):
+            raise ValueError(
+                f"inconsistent party count: {k} extractor specs, "
+                f"{len(self.client_params)} param stacks, "
+                f"{len(self.feature_shapes)} feature shapes")
+        if self.overlap_reps is not None and len(self.overlap_reps) != k:
+            raise ValueError("overlap_reps must carry one H_o^k per party")
+
+    # ------------------------------------------------------------- rebuild
+    def extractors(self) -> List[Model]:
+        return [s.build() for s in self.extractor_specs]
+
+    def classifier(self) -> Model:
+        return make_classifier(self.num_classes)
+
+    @property
+    def num_parties(self) -> int:
+        return len(self.extractor_specs)
+
+    @property
+    def parties_are_homogeneous(self) -> bool:
+        """True when one stacked forward can serve every party: equal
+        extractor specs (⇒ ``_apply_fns_match`` on the rebuilt Models) and
+        equal per-party feature shapes — the serving analogue of the
+        engine's vmap-fast-path precondition."""
+        return (len(set(self.extractor_specs)) == 1
+                and len(set(self.feature_shapes)) == 1)
+
+    def protocol_config(self):
+        """The training ``ProtocolConfig``, reconstructed from the stored
+        fields (deferred import: ``core.protocol`` imports this module)."""
+        from repro.core.protocol import ProtocolConfig
+
+        fields = dict(self.protocol)
+        if "rep_dtype" in fields:
+            fields["rep_dtype"] = jnp.dtype(fields["rep_dtype"])
+        return ProtocolConfig(**fields)
+
+    # ----------------------------------------------------------- reference
+    def predict_logits(self, xs: Sequence[jnp.ndarray]) -> jnp.ndarray:
+        """The unbatched reference forward: per-party extract → concat →
+        joint head, identical math to training-time
+        ``VFLServer.predict_logits`` — the oracle batched serving parity is
+        pinned against (1e-5, tests/test_serving.py)."""
+        exts = self.extractors()
+        reps = [e.apply(p.extractor, x)
+                for e, p, x in zip(exts, self.client_params, xs)]
+        return self.classifier().apply(self.server_params,
+                                       jnp.concatenate(reps, axis=-1))
+
+
+def from_state(clients, server, scenario_spec, cfg=None,
+               metric_name: str = "", metric: float = 0.0,
+               split=None) -> TrainedVFLModel:
+    """Build the deployment artifact from trained protocol state (what
+    ``VFLResult.to_artifact`` delegates to). ``split`` (optional) supplies
+    the aligned rows whose final representations become the artifact's
+    ``overlap_reps`` — the keys/values missing-party estimation needs."""
+    specs = extractor_specs_for(scenario_spec)
+    if len(specs) != len(clients):
+        raise ValueError(
+            f"scenario {scenario_spec.name!r} declares "
+            f"{len(specs)} parties but the result trained {len(clients)}")
+    if server.params is None:
+        raise ValueError("server has no fitted joint classifier — nothing "
+                         "deployable to export")
+    protocol_meta: Dict[str, Any] = {}
+    if cfg is not None:
+        import dataclasses
+
+        for f in dataclasses.fields(cfg):
+            v = getattr(cfg, f.name)
+            protocol_meta[f.name] = (jnp.dtype(v).name
+                                     if f.name == "rep_dtype" else v)
+    overlap_reps = None
+    feature_shapes = []
+    if split is not None:
+        overlap_reps = [c.extract(x) for c, x in zip(clients, split.aligned)]
+        feature_shapes = [tuple(x.shape[1:]) for x in split.aligned]
+    else:
+        # fall back to the clients' own parameter geometry: the first MLP
+        # weight pins the input width; CNN input shapes need the split
+        for spec, c in zip(specs, clients):
+            if spec.kind == "mlp":
+                feature_shapes.append((c.params.extractor["w0"].shape[0],))
+            else:
+                raise ValueError("to_artifact needs `split=` for non-MLP "
+                                 "parties (feature shapes are not "
+                                 "recoverable from the params alone)")
+    return TrainedVFLModel(
+        scenario=scenario_spec.name,
+        num_classes=server.num_classes,
+        feature_shapes=tuple(feature_shapes),
+        extractor_specs=specs,
+        client_params=[PartyParams(*c.params) for c in clients],
+        server_params=server.params,
+        protocol=protocol_meta,
+        overlap_reps=overlap_reps,
+        metric_name=metric_name,
+        metric=float(metric),
+    )
+
+
+# ------------------------------------------------------------- persistence
+def _param_tree(art: TrainedVFLModel) -> dict:
+    tree = {"clients": [{"extractor": p.extractor, "head": p.head}
+                        for p in art.client_params],
+            "server": art.server_params}
+    if art.overlap_reps is not None:
+        tree["overlap_reps"] = list(art.overlap_reps)
+    return tree
+
+
+def save_artifact(directory: str, art: TrainedVFLModel) -> str:
+    """Persist one deployment artifact per directory (atomic, via
+    ``save_checkpoint``): parameters as the pytree, the typed declarative
+    fields as checkpoint metadata."""
+    meta = {
+        "artifact_version": art.version,
+        "scenario": art.scenario,
+        "num_classes": art.num_classes,
+        "feature_shapes": [list(s) for s in art.feature_shapes],
+        "extractor_specs": [s.to_meta() for s in art.extractor_specs],
+        "protocol": dict(art.protocol),
+        "metric_name": art.metric_name,
+        "metric": float(art.metric),
+        "n_overlap": (int(art.overlap_reps[0].shape[0])
+                      if art.overlap_reps is not None else None),
+    }
+    return save_checkpoint(directory, _ARTIFACT_STEP, _param_tree(art), meta)
+
+
+def _template(meta: dict) -> TrainedVFLModel:
+    """Reconstruct a zero-parameter artifact of the metadata's geometry —
+    the load template (treedef + shapes + dtypes) ``load_checkpoint``
+    restores into."""
+    specs = tuple(ExtractorSpec.from_meta(m) for m in meta["extractor_specs"])
+    shapes = tuple(tuple(s) for s in meta["feature_shapes"])
+    num_classes = meta["num_classes"]
+    key = jax.random.PRNGKey(0)          # values are overwritten on load
+    client_params, rep_dims = [], []
+    for spec, shape in zip(specs, shapes):
+        ext = spec.build()
+        sample = jnp.zeros((2,) + shape, jnp.float32)
+        e_params = ext.init(key, sample)
+        head = make_classifier(num_classes)
+        h_params = head.init(key, ext.apply(e_params, sample[:1]))
+        client_params.append(PartyParams(e_params, h_params))
+        rep_dims.append(spec.rep_dim)
+    clf = make_classifier(num_classes)
+    server_params = clf.init(key, jnp.zeros((1, sum(rep_dims)), jnp.float32))
+    overlap = None
+    if meta.get("n_overlap") is not None:
+        overlap = [jnp.zeros((meta["n_overlap"], d), jnp.float32)
+                   for d in rep_dims]
+    return TrainedVFLModel(
+        scenario=meta["scenario"], num_classes=num_classes,
+        feature_shapes=shapes, extractor_specs=specs,
+        client_params=client_params, server_params=server_params,
+        protocol=dict(meta.get("protocol", {})), overlap_reps=overlap,
+        metric_name=meta.get("metric_name", ""),
+        metric=float(meta.get("metric", 0.0)),
+        version=meta["artifact_version"])
+
+
+def load_artifact(directory: str) -> TrainedVFLModel:
+    """Load a deployment artifact: metadata → rebuild the typed template
+    from the specs alone → restore the parameter pytree into it."""
+    # probe the metadata first (template=empty tree restores nothing)
+    _, meta = load_checkpoint(directory, template={}, step=_ARTIFACT_STEP)
+    version = meta.get("artifact_version")
+    if version is None or version > ARTIFACT_VERSION:
+        raise ValueError(
+            f"{directory}: not a VFL serving artifact, or version "
+            f"{version!r} is newer than supported ({ARTIFACT_VERSION})")
+    art = _template(meta)
+    tree, _ = load_checkpoint(directory, template=_param_tree(art),
+                              step=_ARTIFACT_STEP)
+    art.client_params = [PartyParams(c["extractor"], c["head"])
+                         for c in tree["clients"]]
+    art.server_params = tree["server"]
+    if "overlap_reps" in tree:
+        art.overlap_reps = list(tree["overlap_reps"])
+    return art

@@ -61,5 +61,10 @@ def load_checkpoint(directory: str, template: Any, step: Optional[int] = None) -
     for i, leaf in enumerate(leaves):
         arr = blob[f"leaf_{i}"]
         assert arr.shape == tuple(np.shape(leaf)), (i, arr.shape, np.shape(leaf))
-        restored.append(jnp.asarray(arr, dtype=jnp.asarray(leaf).dtype))
+        tmpl_dtype = jnp.asarray(leaf).dtype
+        if arr.dtype.kind == "V":
+            # np.savez stores ml_dtypes leaves (bfloat16, …) as raw void
+            # bytes; the template's dtype reinterprets the bit pattern
+            arr = arr.view(np.dtype(tmpl_dtype))
+        restored.append(jnp.asarray(arr, dtype=tmpl_dtype))
     return jax.tree_util.tree_unflatten(treedef, restored), meta

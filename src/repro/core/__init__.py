@@ -8,9 +8,16 @@ from repro.core.baselines import (IterativeConfig, run_fedbcd,
                                   run_fedcvt_seeds, run_vanilla,
                                   run_vanilla_seeds)
 from repro.core.ssl import SSLConfig
+from repro.core.runners import RUNNERS, RunnerEntry
+from repro.core.rows import ResultRow, serving_row, training_row
 
 __all__ = [
     "CommLedger",
+    "RUNNERS",
+    "RunnerEntry",
+    "ResultRow",
+    "training_row",
+    "serving_row",
     "ProtocolConfig",
     "IterativeConfig",
     "SSLConfig",

@@ -88,17 +88,22 @@ class VFLResult:
 
     def summary_row(self) -> dict:
         """JSON-ready summary of the paper's three columns (metric, comm
-        bytes, comm times) — what benchmark tables serialize per method."""
-        row = {
-            "metric_name": self.metric_name,
-            "metric": float(self.metric),
-            "comm_bytes": int(self.ledger.total_bytes()),
-            "comm_times": int(self.ledger.comm_times()),
-        }
-        for k in ("iterations", "engine_path", "seed_fold", "scenario_fold"):
-            if k in self.diagnostics:
-                row[k] = self.diagnostics[k]
-        return row
+        bytes, comm times) — built by the ONE typed row builder every
+        benchmark surface shares (``repro.core.rows``, DESIGN.md §13)."""
+        from repro.core import rows
+        return rows.training_row(self)
+
+    def to_artifact(self, scenario_spec, cfg=None, split=None):
+        """Export this result as a deployable
+        :class:`~repro.checkpoint.artifact.TrainedVFLModel` — per-party
+        extractor params + apply identity, the fitted joint head, and
+        provenance (DESIGN.md §13). Pass ``split`` to also bake the final
+        overlap representations H_o (what serving-time missing-party
+        estimation attends over, Eq. 10)."""
+        from repro.checkpoint import artifact
+        return artifact.from_state(self.clients, self.server, scenario_spec,
+                                   cfg=cfg, metric_name=self.metric_name,
+                                   metric=self.metric, split=split)
 
 
 # --------------------------------------------------------------------------
@@ -556,30 +561,6 @@ def _assert_ledgers_identical(ledgers: Sequence[CommLedger]) -> None:
                 f"bytes)")
 
 
-def _batched_impls() -> dict:
-    from repro.core import baselines   # deferred: baselines imports protocol
-
-    return {
-        run_one_shot: _one_shot_seeds,
-        run_few_shot: _few_shot_seeds,
-        run_few_shot_finetune: _few_shot_finetune_seeds,
-        baselines.run_vanilla: baselines.run_vanilla_seeds,
-        baselines.run_fedcvt: baselines.run_fedcvt_seeds,
-        baselines.run_fedbcd: baselines.run_fedbcd_seeds,
-    }
-
-
-def _reject_stateful_kwargs(entry: str, runner_kwargs: dict) -> None:
-    stateful = sorted({"clients", "server", "ledger", "clients_per_seed",
-                       "servers"} & set(runner_kwargs))
-    if stateful:
-        raise ValueError(
-            f"{entry} does not accept per-seed state kwargs {stateful}: "
-            f"one object cannot serve every seed (and the heterogeneous-"
-            f"splits fallback loop cannot thread per-seed state) — call "
-            f"the runner or its *_seeds entry directly instead")
-
-
 def _run_one_scenario_seeds(runner, impl, keys, splits, extractors, ssl_cfgs,
                             cfg, **runner_kwargs) -> List[VFLResult]:
     """One scenario's S seeds when the cross-scenario fold doesn't apply:
@@ -637,6 +618,8 @@ def run_scenarios_seeds(
     the whole flat batch is asserted at every exchange on the folded path.
     Per-seed *state* kwargs are rejected exactly as in :func:`run_seeds`.
     """
+    from repro.core import runners as runner_registry  # deferred: registry
+                                                       # imports this module
     num_scenarios = len(keys)
     if not (len(splits) == len(extractors) == len(ssl_cfgs)
             == num_scenarios):
@@ -652,8 +635,10 @@ def run_scenarios_seeds(
             raise ValueError(
                 "run_scenarios_seeds needs a rectangular C×S grid: every "
                 "scenario must carry the same per-seed list lengths")
-    _reject_stateful_kwargs("run_scenarios_seeds", runner_kwargs)
-    impl = _batched_impls().get(runner)
+    entry = runner_registry.resolve(runner)
+    runner_registry.reject_stateful_kwargs("run_scenarios_seeds",
+                                           runner_kwargs, entry)
+    impl = entry.seeds_impl if entry is not None else None
     flat_splits = [sp for row in splits for sp in row]
     if impl is not None and num_scenarios > 1 \
             and _splits_are_homogeneous(flat_splits):
@@ -721,7 +706,9 @@ def run_seeds(
     if not (len(splits) == len(extractors) == len(ssl_cfgs) == num_seeds):
         raise ValueError("run_seeds needs one split / extractor stack / "
                          "ssl-cfg list per seed")
-    _reject_stateful_kwargs("run_seeds", runner_kwargs)
+    from repro.core import runners as runner_registry
+    runner_registry.reject_stateful_kwargs(
+        "run_seeds", runner_kwargs, runner_registry.resolve(runner))
     return run_scenarios_seeds(runner, [list(keys)], [list(splits)],
                                [list(extractors)], [list(ssl_cfgs)], cfg,
                                **runner_kwargs)[0]

@@ -1,0 +1,125 @@
+"""THE runner registry: one typed dispatch surface for every VFL method.
+
+Before this module, the runner→seed-batched-impl mapping lived in
+``core.protocol._batched_impls()`` and the method-name→runner mapping was
+duplicated in ``benchmarks/frontier.py`` — two string/function tables that
+could drift. Every dispatch site now resolves through :data:`RUNNERS`:
+
+* ``run_seeds`` / ``run_scenarios_seeds`` look up the seed-batched impl
+  (and the per-seed *state* kwargs the folded path must reject) via
+  :func:`resolve`;
+* ``benchmarks/frontier.py`` resolves its method names (including the
+  ``"iterative"`` alias for vanilla SplitNN) via :func:`get`;
+* the serving layer (``launch/vfl_serve``, ``benchmarks/serving.py``)
+  consults ``servable`` before exporting a runner's result as a
+  :class:`~repro.checkpoint.artifact.TrainedVFLModel`.
+
+A :class:`RunnerEntry` is the method's full contract: the single-seed
+runner (always the S = 1 case of the seed-batched impl), the impl itself,
+which config family it takes (``ProtocolConfig`` vs ``IterativeConfig``),
+the ledger policy (all current runners produce the prototype ledger ONCE
+host-side; multi-seed orchestration copies it per result), the stateful
+kwargs that cannot thread through a fold, and serving eligibility.
+Unregistered runners still work everywhere — they take the per-seed
+fallback loop with the default stateful-kwarg rejection.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, FrozenSet, List, Optional, Tuple, Union
+
+from repro.core import baselines, protocol
+
+# per-seed *state* kwargs: one live object cannot serve S folded seeds (and
+# the heterogeneous-splits fallback loop cannot thread per-seed state)
+STATE_KWARGS: FrozenSet[str] = frozenset(
+    {"clients", "server", "ledger", "clients_per_seed", "servers"})
+
+#: how the seed-batched impl produces ledgers — every current runner logs
+#: host-side once ("prototype"); orchestration copies it per result
+LEDGER_PROTOTYPE = "prototype"
+
+
+@dataclass(frozen=True)
+class RunnerEntry:
+    """One method's dispatch contract (see module docstring)."""
+
+    name: str                       # canonical method name
+    runner: Callable                # single-seed entry (public API)
+    seeds_impl: Callable            # seed-batched impl (DESIGN.md §10-11)
+    kind: str                       # "protocol" | "iterative" (config family)
+    ledger_policy: str = LEDGER_PROTOTYPE
+    stateful_kwargs: FrozenSet[str] = STATE_KWARGS
+    servable: bool = True           # result exports as a TrainedVFLModel
+    aliases: Tuple[str, ...] = ()
+
+
+_BY_NAME: Dict[str, RunnerEntry] = {}
+_BY_RUNNER: Dict[Callable, RunnerEntry] = {}
+
+
+def register(entry: RunnerEntry) -> RunnerEntry:
+    for name in (entry.name,) + entry.aliases:
+        if name in _BY_NAME:
+            raise ValueError(f"runner name {name!r} already registered")
+        _BY_NAME[name] = entry
+    _BY_RUNNER[entry.runner] = entry
+    return entry
+
+
+def resolve(runner_or_name: Union[str, Callable]) -> Optional[RunnerEntry]:
+    """The entry for a runner callable or method name; None when
+    unregistered (callers then take the per-seed fallback loop)."""
+    if isinstance(runner_or_name, str):
+        return _BY_NAME.get(runner_or_name)
+    return _BY_RUNNER.get(runner_or_name)
+
+
+def get(name: str) -> RunnerEntry:
+    """Like :func:`resolve` but by name only and raising on unknowns —
+    what benchmark CLIs use so a typo'd method fails loudly."""
+    entry = _BY_NAME.get(name)
+    if entry is None:
+        known = ", ".join(sorted(_BY_NAME))
+        raise KeyError(f"unknown runner {name!r}; registered: {known}")
+    return entry
+
+
+def names(include_aliases: bool = False) -> List[str]:
+    if include_aliases:
+        return sorted(_BY_NAME)
+    return sorted({e.name for e in _BY_NAME.values()})
+
+
+def reject_stateful_kwargs(entry_label: str, runner_kwargs: dict,
+                           entry: Optional[RunnerEntry] = None) -> None:
+    """Refuse per-seed state kwargs at the multi-seed entries. The reject
+    list is the registry entry's ``stateful_kwargs`` attribute (the default
+    :data:`STATE_KWARGS` for unregistered runners)."""
+    banned = entry.stateful_kwargs if entry is not None else STATE_KWARGS
+    stateful = sorted(banned & set(runner_kwargs))
+    if stateful:
+        raise ValueError(
+            f"{entry_label} does not accept per-seed state kwargs "
+            f"{stateful}: one object cannot serve every seed (and the "
+            f"heterogeneous-splits fallback loop cannot thread per-seed "
+            f"state) — call the runner or its *_seeds entry directly "
+            f"instead")
+
+
+# ---------------------------------------------------------------- catalog
+RUNNERS: Tuple[RunnerEntry, ...] = tuple(register(e) for e in (
+    RunnerEntry("one_shot", protocol.run_one_shot,
+                protocol._one_shot_seeds, kind="protocol"),
+    RunnerEntry("few_shot", protocol.run_few_shot,
+                protocol._few_shot_seeds, kind="protocol"),
+    RunnerEntry("few_shot_finetune", protocol.run_few_shot_finetune,
+                protocol._few_shot_finetune_seeds, kind="protocol"),
+    RunnerEntry("vanilla", baselines.run_vanilla,
+                baselines.run_vanilla_seeds, kind="iterative",
+                aliases=("iterative",)),
+    RunnerEntry("fedcvt", baselines.run_fedcvt,
+                baselines.run_fedcvt_seeds, kind="iterative"),
+    RunnerEntry("fedbcd", baselines.run_fedbcd,
+                baselines.run_fedbcd_seeds, kind="iterative"),
+))

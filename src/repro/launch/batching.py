@@ -1,0 +1,116 @@
+"""The shared fixed-shape serving batcher (DESIGN.md §13).
+
+Online traffic is ragged — requests arrive in dribbles of 1..capacity rows —
+but jitted programs want ONE shape. The PR 3 training-side answer (pad to a
+fixed gate count, carry a validity mask, let ``jnp.where`` neutralize the
+padding) applies unchanged at serving time: every batch is padded to the
+engine's ``capacity`` and travels with a boolean row mask, so one compiled
+forward serves every traffic pattern and changing batch composition never
+recompiles. Both serving drivers — the VFL path (``launch/vfl_serve``) and
+the model-zoo path (``launch/serve``) — batch and time through this module
+instead of forking their own loops.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, NamedTuple, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class MaskedBatch(NamedTuple):
+    """One fixed-shape unit of traffic: per-party feature blocks padded to
+    capacity on axis 0, plus the validity mask separating real rows from
+    padding."""
+
+    xs: Tuple[jnp.ndarray, ...]     # K arrays, each (capacity, ...)
+    mask: jnp.ndarray               # (capacity,) bool — True = real row
+    n: int                          # number of valid rows
+
+
+def pad_to_capacity(xs: Sequence[jnp.ndarray], capacity: int) -> MaskedBatch:
+    """Pad every per-party block of an ``n``-row request up to ``capacity``
+    rows (zeros — the mask, not the values, carries validity)."""
+    n = int(xs[0].shape[0])
+    if n > capacity:
+        raise ValueError(f"request of {n} rows exceeds capacity {capacity}; "
+                         f"split it with chunk_requests first")
+    for x in xs[1:]:
+        if int(x.shape[0]) != n:
+            raise ValueError("every party block must carry the same rows")
+    padded = tuple(
+        jnp.pad(x, [(0, capacity - n)] + [(0, 0)] * (x.ndim - 1))
+        for x in xs)
+    mask = jnp.arange(capacity) < n
+    return MaskedBatch(padded, mask, n)
+
+
+def chunk_requests(xs: Sequence[jnp.ndarray],
+                   capacity: int) -> List[Tuple[jnp.ndarray, ...]]:
+    """Split an arbitrarily large request into capacity-sized chunks (the
+    last one short — ``pad_to_capacity`` squares it up)."""
+    n = int(xs[0].shape[0])
+    return [tuple(x[i:i + capacity] for x in xs)
+            for i in range(0, max(n, 1), capacity)]
+
+
+def percentile(samples: Sequence[float], q: float) -> float:
+    """The ``q``-th percentile (linear interpolation, numpy semantics)."""
+    return float(np.percentile(np.asarray(samples, np.float64), q))
+
+
+class LatencyRecorder:
+    """Wall-clock samples → the serving row's p50/p99/throughput summary."""
+
+    def __init__(self) -> None:
+        self.samples_s: List[float] = []
+        self.rows = 0
+
+    def record(self, seconds: float, rows: int) -> None:
+        self.samples_s.append(float(seconds))
+        self.rows += int(rows)
+
+    def summary(self) -> dict:
+        if not self.samples_s:
+            raise ValueError("no latency samples recorded")
+        total = sum(self.samples_s)
+        return {
+            "batches": len(self.samples_s),
+            "rows": self.rows,
+            "p50_ms": percentile(self.samples_s, 50) * 1e3,
+            "p99_ms": percentile(self.samples_s, 99) * 1e3,
+            "mean_ms": total / len(self.samples_s) * 1e3,
+            "rows_per_s": self.rows / total if total > 0 else float("inf"),
+        }
+
+
+def drive(step: Callable[[MaskedBatch], jnp.ndarray],
+          requests: Sequence[Sequence[jnp.ndarray]],
+          capacity: int,
+          warmup: int = 1) -> Tuple[List[jnp.ndarray], LatencyRecorder]:
+    """Run a request stream through a fixed-shape step: chunk → pad → call,
+    timing each step after ``warmup`` untimed compile calls. ``step`` takes
+    a :class:`MaskedBatch` and returns per-row outputs (capacity leading);
+    only the valid rows are kept. Returns (per-request outputs, recorder).
+    """
+    rec = LatencyRecorder()
+    if requests and warmup > 0:
+        for _ in range(warmup):
+            # a fresh padded batch per call: steps may donate their inputs
+            first = pad_to_capacity(chunk_requests(requests[0], capacity)[0],
+                                    capacity)
+            step(first).block_until_ready()
+    outs: List[jnp.ndarray] = []
+    for req in requests:
+        parts = []
+        for chunk in chunk_requests(req, capacity):
+            batch = pad_to_capacity(chunk, capacity)
+            t0 = time.perf_counter()
+            out = step(batch)
+            out.block_until_ready()
+            rec.record(time.perf_counter() - t0, batch.n)
+            parts.append(out[:batch.n])
+        outs.append(jnp.concatenate(parts, axis=0) if len(parts) > 1
+                    else parts[0])
+    return outs, rec

@@ -1,4 +1,8 @@
-"""Batched serving driver: prefill a prompt batch, then decode greedily.
+"""Batched model-zoo serving driver: prefill a prompt batch, then decode
+greedily. The forward is hoisted into :func:`prefill` / :func:`greedy_decode`
+so other drivers (e.g. throughput sweeps) compose them, and timing goes
+through the shared ``launch/batching.py`` recorder — the same stopwatch the
+VFL serving path (``launch/vfl_serve``) reports p50/p99 with.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-7b --reduce \
       --batch 4 --prompt-len 32 --gen 16
@@ -6,15 +10,60 @@
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.launch import specs as SP
+from repro.launch.batching import LatencyRecorder
 from repro.launch.steps import make_decode_step
 from repro.models.model_zoo import build_model
+
+
+def make_serving_decode(model):
+    """The zoo's jitted serving step: one decode with the cache donated
+    (steady-state decoding allocates no fresh KV buffers)."""
+    return jax.jit(make_decode_step(model), donate_argnums=(1,))
+
+
+def prefill(decode, params, cache, prompt, rec: LatencyRecorder = None):
+    """Step the decoder over the prompt tokens (cache-exact; the bulk
+    ``prefill_fn`` path trades exactness checks for throughput). Returns
+    the last-position logits and the filled cache."""
+    b, prompt_len = prompt.shape
+    logits = None
+    for t in range(prompt_len):
+        batch = {"token": prompt[:, t:t + 1],
+                 "pos": jnp.full((b, 1), t, jnp.int32)}
+        logits, cache = _timed_decode(decode, params, cache, batch, rec, b)
+    return logits, cache
+
+
+def greedy_decode(decode, params, cache, logits, start: int, steps: int,
+                  rec: LatencyRecorder = None):
+    """Greedy continuation for ``steps`` tokens from position ``start``.
+    Returns the (b, steps) generated tokens and the advanced cache."""
+    b = logits.shape[0]
+    generated = []
+    for t in range(start, start + steps):
+        tok = jnp.argmax(logits, axis=-1)[:, None]
+        generated.append(tok)
+        batch = {"token": tok, "pos": jnp.full((b, 1), t, jnp.int32)}
+        logits, cache = _timed_decode(decode, params, cache, batch, rec, b)
+    return jnp.concatenate(generated, axis=1), cache
+
+
+def _timed_decode(decode, params, cache, batch, rec, rows):
+    if rec is None:
+        return decode(params, cache, batch)
+    import time
+
+    t0 = time.perf_counter()
+    logits, cache = decode(params, cache, batch)
+    logits.block_until_ready()
+    rec.record(time.perf_counter() - t0, rows)
+    return logits, cache
 
 
 def main() -> None:
@@ -37,7 +86,7 @@ def main() -> None:
     b = args.batch
     cache_len = args.prompt_len + args.gen
     cache = SP.zeros_like_spec(model.cache_shapes(b, cache_len))
-    decode = jax.jit(make_decode_step(model), donate_argnums=(1,))
+    decode = make_serving_decode(model)
 
     prompt = jax.random.randint(kt, (b, args.prompt_len), 0, cfg.vocab_size)
     if cfg.family == "audio":
@@ -46,23 +95,14 @@ def main() -> None:
         emb = 0.02 * jax.random.normal(ke, (b, cfg.prefix_tokens, cfg.d_model))
         cache["enc_out"] = _encode(params, cfg, emb).astype(cache["enc_out"].dtype)
 
-    # prefill by stepping the decoder over the prompt (cache-exact; a bulk
-    # prefill_fn path exists for throughput benchmarking)
-    t0 = time.time()
-    for t in range(args.prompt_len):
-        batch = {"token": prompt[:, t:t + 1],
-                 "pos": jnp.full((b, 1), t, jnp.int32)}
-        logits, cache = decode(params, cache, batch)
-    generated = []
-    for t in range(args.prompt_len, cache_len):
-        tok = jnp.argmax(logits, axis=-1)[:, None]
-        generated.append(tok)
-        batch = {"token": tok, "pos": jnp.full((b, 1), t, jnp.int32)}
-        logits, cache = decode(params, cache, batch)
-    out = jnp.concatenate(generated, axis=1)
-    dt = time.time() - t0
-    print(f"arch={cfg.name} generated {out.shape} in {dt:.2f}s "
-          f"({b * cache_len / dt:.1f} tok/s)")
+    rec = LatencyRecorder()
+    logits, cache = prefill(decode, params, cache, prompt, rec=rec)
+    out, cache = greedy_decode(decode, params, cache, logits,
+                               args.prompt_len, args.gen, rec=rec)
+    s = rec.summary()
+    print(f"arch={cfg.name} generated {out.shape}: "
+          f"p50={s['p50_ms']:.2f}ms/step p99={s['p99_ms']:.2f}ms/step "
+          f"{s['rows_per_s']:.1f} tok/s")
     print("sample:", out[0][:16].tolist())
 
 

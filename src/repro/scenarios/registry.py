@@ -30,7 +30,6 @@ import jax
 
 from repro.core.ssl import SSLConfig
 from repro.data import synthetic, vertical
-from repro.models import make_cnn_extractor, make_mlp_extractor
 from repro.models.extractors import Model
 
 GENERATORS: Dict[str, Callable] = {
@@ -119,12 +118,12 @@ def by_tag(tag: str) -> List[ScenarioSpec]:
 
 
 def _make_extractors(spec: ScenarioSpec) -> List[Model]:
-    if spec.modality == "image":
-        return [make_cnn_extractor(rep_dim=spec.rep_dim, widths=spec.widths,
-                                   blocks_per_stage=spec.blocks_per_stage)
-                for _ in range(spec.num_parties)]
-    return [make_mlp_extractor(rep_dim=spec.rep_dim, hidden=spec.hidden)
-            for _ in range(spec.num_parties)]
+    # single-sourced with the deployment artifact: the per-party specs a
+    # scenario implies are written down ONCE (checkpoint/artifact.py), so
+    # a trained result's exported apply identity is exactly what built it
+    from repro.checkpoint.artifact import extractor_specs_for
+
+    return [s.build() for s in extractor_specs_for(spec)]
 
 
 def _make_ssl_cfgs(spec: ScenarioSpec) -> List[SSLConfig]:

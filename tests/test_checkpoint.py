@@ -1,0 +1,93 @@
+"""Round-trip coverage for checkpoint/ckpt.py (ISSUE 7): save/load/latest
+with metadata, mixed dtypes, and missing-directory edges — the substrate
+the serving artifact layer persists through."""
+import os
+import shutil
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+
+
+def _tree():
+    return {
+        "w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "nested": {"b": jnp.ones((4,), jnp.float32) * 0.5},
+        "stack": [jnp.full((2, 2), 7.0), jnp.zeros((1,))],
+    }
+
+
+def test_roundtrip_values_and_metadata(tmp_path):
+    d = str(tmp_path / "ck")
+    tree = _tree()
+    path = save_checkpoint(d, 3, tree, metadata={"note": "hello", "k": 2})
+    assert os.path.exists(path) and path.endswith("ckpt_00000003.npz")
+
+    zeros = {
+        "w": jnp.zeros((3, 4), jnp.float32),
+        "nested": {"b": jnp.zeros((4,), jnp.float32)},
+        "stack": [jnp.zeros((2, 2)), jnp.zeros((1,))],
+    }
+    restored, meta = load_checkpoint(d, template=zeros)
+    np.testing.assert_allclose(np.asarray(restored["w"]), np.asarray(tree["w"]))
+    np.testing.assert_allclose(np.asarray(restored["nested"]["b"]),
+                               np.asarray(tree["nested"]["b"]))
+    np.testing.assert_allclose(np.asarray(restored["stack"][0]), 7.0)
+    # user metadata rides along, the step slot is stamped in
+    assert meta["note"] == "hello" and meta["k"] == 2 and meta["step"] == 3
+
+
+def test_mixed_dtypes_restore_to_template_dtypes(tmp_path):
+    d = str(tmp_path / "ck")
+    tree = {
+        "f32": jnp.ones((2, 3), jnp.float32),
+        "bf16": jnp.ones((4,), jnp.bfloat16) * 1.5,
+        "i32": jnp.arange(5, dtype=jnp.int32),
+        "flag": jnp.array([True, False]),
+    }
+    save_checkpoint(d, 0, tree)
+    template = {
+        "f32": jnp.zeros((2, 3), jnp.float32),
+        "bf16": jnp.zeros((4,), jnp.bfloat16),
+        "i32": jnp.zeros((5,), jnp.int32),
+        "flag": jnp.zeros((2,), bool),
+    }
+    restored, _ = load_checkpoint(d, template=template)
+    assert restored["bf16"].dtype == jnp.bfloat16
+    assert restored["i32"].dtype == jnp.int32
+    assert restored["flag"].dtype == bool
+    np.testing.assert_allclose(
+        np.asarray(restored["bf16"], np.float32), 1.5)
+    np.testing.assert_array_equal(np.asarray(restored["i32"]), np.arange(5))
+
+
+def test_latest_step_ordering_and_selection(tmp_path):
+    d = str(tmp_path / "ck")
+    assert latest_step(d) is None          # directory doesn't exist yet
+    for step, val in [(1, 1.0), (10, 10.0), (5, 5.0)]:
+        save_checkpoint(d, step, {"x": jnp.full((2,), val)})
+    assert latest_step(d) == 10
+    # load picks the LATEST by default, an explicit step wins
+    t = {"x": jnp.zeros((2,))}
+    latest, meta = load_checkpoint(d, template=t)
+    assert float(latest["x"][0]) == 10.0 and meta["step"] == 10
+    five, meta5 = load_checkpoint(d, template=t, step=5)
+    assert float(five["x"][0]) == 5.0 and meta5["step"] == 5
+
+
+def test_deleted_directory_raises_cleanly(tmp_path):
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, 0, {"x": jnp.zeros((1,))})
+    shutil.rmtree(d)
+    assert latest_step(d) is None
+    with pytest.raises(FileNotFoundError):
+        load_checkpoint(d, template={"x": jnp.zeros((1,))})
+
+
+def test_shape_mismatch_is_rejected(tmp_path):
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, 0, {"x": jnp.zeros((3,))})
+    with pytest.raises(AssertionError):
+        load_checkpoint(d, template={"x": jnp.zeros((4,))})
