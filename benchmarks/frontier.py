@@ -75,6 +75,12 @@ grouped sweep must not silently degrade to per-scenario loops).
 shape heuristic, which would wrongly gate equal-dim model-zoo scenarios
 whose Python path is legitimate); the scan fold needs no homogeneity, so
 the iterative check is unconditional.
+
+``--devices N`` (DESIGN.md §14) shards every folded sweep's stacked
+S·C·K axis over an N-device launch mesh (forcing N host devices first on
+CPU-only machines); rows record ``device_fold`` and the blob the mesh,
+and ``--check-gate`` then also requires every folded row to have actually
+sharded (``device_fold == N``).
 """
 from __future__ import annotations
 
@@ -124,18 +130,22 @@ def _aggregate_row(seed_rows) -> dict:
     return row
 
 
-def _runner_cfgs(spec, methods=METHODS) -> dict:
+def _runner_cfgs(spec, methods=METHODS, devices=None) -> dict:
     """Resolve every method through THE runner registry
     (``repro.core.runners``): the entry supplies the runner callable, its
-    ``kind`` picks the config family the scenario budgets parameterize."""
+    ``kind`` picks the config family the scenario budgets parameterize.
+    ``devices`` threads the launch mesh (DESIGN.md §14) into both config
+    families so every folded sweep shards its stacked S·C·K axis."""
     pcfg = ProtocolConfig(
         client_epochs=spec.budget("client_epochs", 8),
         server_epochs=spec.budget("server_epochs", 30),
+        mesh=devices,
     )
     if spec.fewshot_threshold is not None:
         pcfg = dataclasses.replace(pcfg,
                                    fewshot_threshold=spec.fewshot_threshold)
-    icfg = IterativeConfig(iterations=spec.budget("iterations", 300))
+    icfg = IterativeConfig(iterations=spec.budget("iterations", 300),
+                           mesh=devices)
     cfg_by_kind = {"protocol": pcfg, "iterative": icfg}
     return {m: (runner_registry.get(m).runner,
                 cfg_by_kind[runner_registry.get(m).kind])
@@ -147,16 +157,20 @@ def build_bundles(spec, seeds, smoke: bool):
     return [scenarios.build(spec, seed=s, smoke=smoke) for s in seeds]
 
 
-def run_scenario_group(bundles_per_scenario, seeds, methods=METHODS):
+def run_scenario_group(bundles_per_scenario, seeds, methods=METHODS,
+                       devices=None):
     """Run every method on one partitioner GROUP of scenarios over all
     ``seeds``: each method's whole group — C scenarios × S seeds — goes
     through ``run_scenarios_seeds`` as ONE folded sweep (DESIGN.md §12;
     a single scenario is simply the C = 1 width). ``bundles_per_scenario``
-    is the C×S grid of built bundles (``[c][s]``). Returns result rows.
+    is the C×S grid of built bundles (``[c][s]``). ``devices`` shards each
+    folded sweep's stacked axis over that many devices (DESIGN.md §14) —
+    every row's ``device_fold`` diagnostic records whether it did. Returns
+    result rows.
     """
     specs = [bs[0].spec for bs in bundles_per_scenario]
     group_size = len(specs)
-    runner_cfgs = _runner_cfgs(specs[0], methods)
+    runner_cfgs = _runner_cfgs(specs[0], methods, devices=devices)
     # the engine's own fast-path precondition: apply-fn identity + equal
     # SSL configs + equal per-party feature shapes. Heterogeneous feature
     # blocks (e.g. credit/feature-skew) — or equal-dim parties with
@@ -221,11 +235,11 @@ def run_scenario_group(bundles_per_scenario, seeds, methods=METHODS):
     return rows
 
 
-def run_scenario(spec, seeds, smoke: bool, methods=METHODS):
+def run_scenario(spec, seeds, smoke: bool, methods=METHODS, devices=None):
     """Run every method on ONE scenario over all ``seeds`` — the width-1
     group case of :func:`run_scenario_group`."""
     return run_scenario_group([build_bundles(spec, seeds, smoke)], seeds,
-                              methods=methods)
+                              methods=methods, devices=devices)
 
 
 def _check_margins(name: str, method_rows: dict, its: dict, label: str,
@@ -251,7 +265,8 @@ def _check_margins(name: str, method_rows: dict, its: dict, label: str,
         )
 
 
-def check_gate(rows, baseline_path: str = BASELINE_PATH) -> list:
+def check_gate(rows, baseline_path: str = BASELINE_PATH,
+               devices=None) -> list:
     """The CI regression gate. Returns a list of violation strings.
 
     Point estimates upgraded to seed statistics: the one-shot-vs-iterative
@@ -259,6 +274,11 @@ def check_gate(rows, baseline_path: str = BASELINE_PATH) -> list:
     across seeds plus a worst-seed floor, instead of a single seed's
     (possibly lucky) point comparison — few-shot is the framework's
     accuracy ceiling, so its margins are gated alongside one-shot's.
+
+    ``devices`` (a sharded ``--devices N`` sweep) additionally requires
+    every per-seed row that trained on a folded engine path ("vmap" or
+    "scan") to record ``device_fold == devices`` — the mesh must not be
+    silently dropped — and every Python-fallback row to record 1.
     """
     problems = []
     per_seed = [r for r in rows if not r.get("aggregate")]
@@ -266,6 +286,18 @@ def check_gate(rows, baseline_path: str = BASELINE_PATH) -> list:
 
     with open(baseline_path) as fh:
         baseline = json.load(fh)
+
+    if devices is not None:
+        for r in per_seed:
+            want = devices if r.get("engine_path") in ("vmap", "scan") else 1
+            if r.get("device_fold") != want:
+                problems.append(
+                    f"{r['scenario']} seed {r['seed']}: {r['method']} on "
+                    f"engine_path={r.get('engine_path')!r} recorded "
+                    f"device_fold={r.get('device_fold')} under "
+                    f"--devices {devices} (expected {want}) — the stacked "
+                    f"axis did not shard over the launch mesh"
+                )
 
     if os.environ.get("REPRO_ENGINE_MODE", "") == "vmap":
         # the CI matrix forces the fast path: every protocol method whose
@@ -401,7 +433,29 @@ def main(argv=None) -> int:
         "bytes-regression gate",
     )
     ap.add_argument("--baseline", default=BASELINE_PATH)
+    ap.add_argument(
+        "--devices",
+        type=int,
+        default=None,
+        help="shard every folded sweep's stacked S*C*K axis over this many "
+        "devices (DESIGN.md §14); on CPU hosts the device pool is forced "
+        "via --xla_force_host_platform_device_count before jax initializes",
+    )
     args = ap.parse_args(argv)
+
+    if args.devices is not None and args.devices > 1:
+        # set XLA_FLAGS BEFORE the first backend touch (any device_count()
+        # call initializes it and freezes the visible pool) — harmless on
+        # non-CPU platforms, where the flag only affects the host backend
+        from repro.launch.mesh import forced_host_devices
+
+        forced_host_devices(args.devices)
+        if jax.device_count() < args.devices:
+            print(f"--devices {args.devices} requested but only "
+                  f"{jax.device_count()} visible (was the jax backend "
+                  f"already initialized before --devices took effect?)",
+                  file=sys.stderr)
+            return 2
 
     if args.scenarios:
         specs = [scenarios.get(n) for n in args.scenarios]
@@ -423,12 +477,17 @@ def main(argv=None) -> int:
     rows = []
     for g in groups:
         rows.extend(run_scenario_group([bundles[i] for i in g.indices],
-                                       seeds))
+                                       seeds, devices=args.devices))
 
+    mesh = engine.resolve_mesh(args.devices)
     blob = {
         "mode": "smoke" if args.smoke else "full",
         "seed": args.seed,
         "seeds": seeds,
+        "devices": args.devices,
+        "mesh": None if mesh is None else {
+            "axis_names": list(mesh.axis_names),
+            "shape": list(mesh.devices.shape)},
         "groups": [{"scenarios": g.names, "size": g.size} for g in groups],
         "wall_s": round(time.time() - t0, 2),
         "session_cache": session_cache_stats_by_domain(),
@@ -439,7 +498,7 @@ def main(argv=None) -> int:
     print(f"wrote {args.out}: {len(rows)} rows in {blob['wall_s']:.0f}s")
 
     if args.check_gate:
-        problems = check_gate(rows, args.baseline)
+        problems = check_gate(rows, args.baseline, devices=args.devices)
         if problems:
             for p in problems:
                 print(f"GATE VIOLATION: {p}", file=sys.stderr)

@@ -48,7 +48,7 @@ from repro.core.protocol import VFLResult, _build_clients, _evaluate
 from repro.core.server import VFLServer, concat_reps
 from repro.core.ssl import SSLConfig
 from repro.data.loader import epoch_batches
-from repro.engine import batched, iterative
+from repro.engine import batched, iterative, parallel
 from repro.models.extractors import Model, make_classifier
 
 
@@ -66,6 +66,10 @@ class IterativeConfig:
     fedcvt_threshold: float = 0.95
     eval_every: int = 200
     engine_mode: str = "auto"       # "auto" | "scan" | "python" (DESIGN.md §8)
+    mesh: object = None             # device mesh for the stacked seed axis
+                                    # (DESIGN.md §14): None | device count |
+                                    # jax.sharding.Mesh; None consults the
+                                    # REPRO_DEVICE_COUNT env knob
 
     def iter_hparams(self) -> iterative.IterHParams:
         return iterative.IterHParams(client_lr=self.client_lr,
@@ -151,8 +155,12 @@ def _finish_seed_results(cfg: IterativeConfig, ledger: CommLedger,
                    for c, p in zip(clients_all[s], cp)]
         servers[s].params = sp
         name, metric = _evaluate(servers[s], clients, splits[s])
-        diag = {"engine_path": iterative.resolve_mode(cfg.engine_mode),
+        path = iterative.resolve_mode(cfg.engine_mode)
+        diag = {"engine_path": path,
                 "seed_fold": num_seeds,
+                "device_fold": (parallel.device_fold(
+                    parallel.resolve_mesh(cfg.mesh))
+                    if path == "scan" else 1),
                 "final_loss": (float(losses[s][-1]) if losses.shape[1]
                                else None)}
         if extra_diags is not None:
@@ -193,7 +201,8 @@ def run_vanilla_seeds(
         [[c.extractor for c in cl] for cl in clients_all],
         [srv.classifier for srv in servers_all], cfg.iter_hparams(),
         carries, [sp.aligned for sp in splits],
-        [sp.labels for sp in splits], schedules, mode=cfg.engine_mode)
+        [sp.labels for sp in splits], schedules, mode=cfg.engine_mode,
+        mesh=cfg.mesh)
 
     bs = min(cfg.batch_size, splits[0].labels.shape[0])
     _log_iterative_rounds(ledger, clients_all[0], cfg.iterations, bs)
@@ -257,7 +266,8 @@ def run_fedbcd_seeds(
         [[c.extractor for c in cl] for cl in clients_all],
         [srv.classifier for srv in servers_all], cfg.iter_hparams(),
         cfg.fedbcd_q, carries, [sp.aligned for sp in splits],
-        [sp.labels for sp in splits], schedules, mode=cfg.engine_mode)
+        [sp.labels for sp in splits], schedules, mode=cfg.engine_mode,
+        mesh=cfg.mesh)
 
     bs = min(cfg.batch_size, splits[0].labels.shape[0])
     _log_iterative_rounds(ledger, clients_all[0], rounds, bs)
@@ -309,7 +319,7 @@ def run_fedcvt_seeds(
         carries, [sp.aligned for sp in splits],
         [sp.labels for sp in splits], schedules,
         [sp.unaligned for sp in splits], u_schedules,
-        mode=cfg.engine_mode)
+        mode=cfg.engine_mode, mesh=cfg.mesh)
 
     # overlap reps + unaligned reps up; both gradients down
     bs = min(cfg.batch_size, splits[0].labels.shape[0])

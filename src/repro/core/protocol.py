@@ -68,6 +68,10 @@ class ProtocolConfig:
     unlabeled_ratio: int = 2
     use_kernels: bool = False        # one switch: Pallas k-means + SDPA kernels
     engine_mode: str = "auto"        # "auto" | "vmap" | "python" (DESIGN.md §2)
+    mesh: object = None              # device mesh for the stacked engine axis
+                                     # (DESIGN.md §14): None | device count |
+                                     # jax.sharding.Mesh; None consults the
+                                     # REPRO_DEVICE_COUNT env knob
     rep_dtype: jnp.dtype = jnp.float32
 
     def ssl_hparams(self) -> engine.SSLHParams:
@@ -192,6 +196,7 @@ def _one_shot_seeds(
     ledger = ledger if ledger is not None else CommLedger()
     num_seeds = len(keys)
     num_parties = len(splits[0].aligned)
+    mesh = engine.resolve_mesh(cfg.mesh)
 
     st_keys, k_srvs, clients_all, servers = [], [], [], []
     for s in range(num_seeds):
@@ -250,7 +255,7 @@ def _one_shot_seeds(
         flat_grads.extend(grads_all[s])
     flat_pseudo = engine.pseudo_labels_seeds(
         flat_kmeans_keys, flat_grads, splits[0].num_classes,
-        cfg.kmeans_iters, use_kernels=cfg.use_kernels)
+        cfg.kmeans_iters, use_kernels=cfg.use_kernels, mesh=mesh)
     pseudo_all = engine.unflatten_seed_results(flat_pseudo, num_seeds,
                                                num_parties)
     tasks_per_seed = []
@@ -261,13 +266,19 @@ def _one_shot_seeds(
                                        splits[s].unaligned):
             diags[s]["kmeans_purity"].append(clustering.cluster_purity(
                 pseudo, splits[s].labels, splits[s].num_classes))
-            tasks.append(ssl_task_for(c, x_o, pseudo, x_u))
+            # equal-shape overlap variants pad x_o to a fixed capacity; the
+            # split's validity mask zeroes the padded rows out of the loss
+            tasks.append(ssl_task_for(c, x_o, pseudo, x_u,
+                                      labeled_mask=splits[s].aligned_mask))
         diags[s]["pseudo_labels"] = pseudo_all[s]   # Ŷ_o^k — few-shot ⑤'
         tasks_per_seed.append(tasks)                # reuses them (Alg. 2)
     params_all, metrics_all, paths = engine.train_clients_ssl_seeds(
-        kss, tasks_per_seed, cfg.ssl_hparams(), mode=cfg.engine_mode)
+        kss, tasks_per_seed, cfg.ssl_hparams(), mode=cfg.engine_mode,
+        mesh=mesh)
     for s in range(num_seeds):
         diags[s]["engine_path"] = paths[s]
+        diags[s]["device_fold"] = (engine.device_fold(mesh)
+                                   if paths[s] == "vmap" else 1)
         diags[s]["ssl_metrics"].extend(metrics_all[s])
         clients_all[s] = [replace(c, params=p)
                           for c, p in zip(clients_all[s], params_all[s])]
@@ -284,7 +295,7 @@ def _one_shot_seeds(
                            [sp.labels for sp in splits],
                            epochs=cfg.server_epochs,
                            batch_size=cfg.batch_size,
-                           learning_rate=cfg.server_lr)
+                           learning_rate=cfg.server_lr, mesh=mesh)
     if final_reps_out is not None:
         final_reps_out.extend(reps_all)
 
@@ -334,7 +345,8 @@ def _few_shot_finetune_seeds(
     it_cfg = baselines.IterativeConfig(iterations=finetune_iterations,
                                        batch_size=cfg.batch_size,
                                        client_lr=cfg.client_lr / 10,
-                                       server_lr=cfg.server_lr / 10)
+                                       server_lr=cfg.server_lr / 10,
+                                       mesh=cfg.mesh)
     results = baselines.run_vanilla_seeds(
         k2s, splits, extractors, ssl_cfgs, it_cfg,
         clients_per_seed=[f.clients for f in fews],
@@ -380,6 +392,7 @@ def _few_shot_seeds(
     ledger = ledger if ledger is not None else CommLedger()
     num_seeds = len(keys)
     num_parties = len(splits[0].aligned)
+    mesh = engine.resolve_mesh(cfg.mesh)
 
     st_keys, k_ones = [], []
     for s in range(num_seeds):
@@ -415,7 +428,7 @@ def _few_shot_seeds(
                               [sp.labels for sp in splits],
                               epochs=cfg.server_epochs,
                               batch_size=cfg.batch_size,
-                              learning_rate=cfg.server_lr)
+                              learning_rate=cfg.server_lr, mesh=mesh)
 
     # ③' SDPA estimation + Eq. 8-9 gating;  ④' download p̂
     probs_all = [[] for _ in range(num_seeds)]
@@ -475,8 +488,13 @@ def _few_shot_seeds(
             x_lab = jnp.concatenate([x_o, x_u], axis=0)
             y_lab = fewshot_phase5_labels(c, x_o, x_u, pseudo,
                                           cfg.fewshot_relabel_overlap)
-            lab_mask = jnp.concatenate(
-                [jnp.ones(x_o.shape[0], jnp.float32), take])
+            # an equal-shape overlap variant's padded x_o rows stay invalid
+            # in phase ⑤' too: the overlap part of the mask is the split's
+            # validity mask instead of all-ones
+            o_mask = (jnp.ones(x_o.shape[0], jnp.float32)
+                      if splits[s].aligned_mask is None
+                      else splits[s].aligned_mask.astype(jnp.float32))
+            lab_mask = jnp.concatenate([o_mask, take])
             tasks.append(ssl_task_for(c, x_lab, y_lab, x_u,
                                       labeled_mask=lab_mask,
                                       unlabeled_mask=1.0 - take))
@@ -484,9 +502,12 @@ def _few_shot_seeds(
                 _safe_mean(take))
         tasks_per_seed.append(tasks)
     params_all, metrics_all, paths = engine.train_clients_ssl_seeds(
-        kss, tasks_per_seed, cfg.ssl_hparams(), mode=cfg.engine_mode)
+        kss, tasks_per_seed, cfg.ssl_hparams(), mode=cfg.engine_mode,
+        mesh=mesh)
     for s in range(num_seeds):
         diags[s]["engine_path"] = paths[s]
+        diags[s]["device_fold"] = (engine.device_fold(mesh)
+                                   if paths[s] == "vmap" else 1)
         diags[s].setdefault("ssl_metrics", []).extend(metrics_all[s])
         clients_all[s] = [replace(c, params=p)
                           for c, p in zip(clients_all[s], params_all[s])]
@@ -507,7 +528,7 @@ def _few_shot_seeds(
                            [sp.labels for sp in splits],
                            epochs=cfg.server_epochs,
                            batch_size=cfg.batch_size,
-                           learning_rate=cfg.server_lr)
+                           learning_rate=cfg.server_lr, mesh=mesh)
 
     results = []
     for s in range(num_seeds):
@@ -535,10 +556,12 @@ def _splits_are_homogeneous(splits: Sequence[VerticalSplit]) -> bool:
     s0 = splits[0]
 
     def sig(sp):
+        mask = getattr(sp, "aligned_mask", None)
         return (tuple(x.shape for x in sp.aligned),
                 tuple(x.shape for x in sp.unaligned),
                 tuple(x.shape for x in sp.test_aligned),
-                sp.labels.shape, sp.test_labels.shape, sp.num_classes)
+                sp.labels.shape, sp.test_labels.shape, sp.num_classes,
+                None if mask is None else tuple(mask.shape))
 
     return all(sig(sp) == sig(s0) for sp in splits[1:])
 
@@ -581,6 +604,7 @@ def _run_one_scenario_seeds(runner, impl, keys, splits, extractors, ssl_cfgs,
         _assert_ledgers_identical([r.ledger for r in results])
     for res in results:
         res.diagnostics.setdefault("scenario_fold", 1)
+        res.diagnostics.setdefault("device_fold", 1)
     return results
 
 

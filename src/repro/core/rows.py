@@ -29,7 +29,8 @@ from typing import Any, Dict, Mapping, Optional
 KINDS = ("train", "serving")
 
 #: execution diagnostics a training row forwards from ``VFLResult``
-DIAGNOSTIC_KEYS = ("iterations", "engine_path", "seed_fold", "scenario_fold")
+DIAGNOSTIC_KEYS = ("iterations", "engine_path", "seed_fold", "scenario_fold",
+                   "device_fold")
 
 CORE_KEYS = ("kind", "metric_name", "metric", "comm_bytes", "comm_times")
 

@@ -163,7 +163,7 @@ def _fit(key, model: Model, params, x, y, epochs, batch_size, lr):
 def train_classifier_seeds(keys, servers: Sequence[VFLServer],
                            reps_per_seed, labels_per_seed,
                            epochs: int = 50, batch_size: int = 32,
-                           learning_rate: float = 0.01):
+                           learning_rate: float = 0.01, mesh=None):
     """Seed-batched :meth:`VFLServer.train_classifier`: per-seed key and
     schedule discipline identical to the method (so a multi-seed run matches
     a Python loop of single-seed runs), but every seed's fit executes inside
@@ -187,7 +187,7 @@ def train_classifier_seeds(keys, servers: Sequence[VFLServer],
     else:
         fitted = batched.fit_sessions_batched(
             servers[0].classifier, learning_rate, params, hs,
-            labels_per_seed, scheds)
+            labels_per_seed, scheds, mesh=mesh)
     for srv, p in zip(servers, fitted):
         srv.params = p
     return servers
@@ -196,7 +196,7 @@ def train_classifier_seeds(keys, servers: Sequence[VFLServer],
 def fit_aux_classifiers_seeds(keys, servers: Sequence[VFLServer],
                               reps_per_seed, labels_per_seed,
                               epochs: int = 50, batch_size: int = 32,
-                              learning_rate: float = 0.01):
+                              learning_rate: float = 0.01, mesh=None):
     """Seed-batched :meth:`VFLServer.fit_aux_classifiers`: for each party,
     every seed's aux fit folds into one vmapped scan session. All fits of
     one architecture × learning rate share a single cached program with the
@@ -222,7 +222,8 @@ def fit_aux_classifiers_seeds(keys, servers: Sequence[VFLServer],
             fitted = params
         else:
             fitted = batched.fit_sessions_batched(
-                clfs[0], learning_rate, params, hs, labels_per_seed, scheds)
+                clfs[0], learning_rate, params, hs, labels_per_seed, scheds,
+                mesh=mesh)
         for srv, clf, p in zip(servers, clfs, fitted):
             srv.aux_classifiers.append(clf)
             srv.aux_params.append(p)

@@ -35,6 +35,11 @@ class VerticalSplit:
     test_labels: jnp.ndarray
     num_classes: int
     unaligned_labels: Optional[List[jnp.ndarray]] = None  # for oracle diagnostics only
+    #: validity mask over the aligned rows when the partition was built with a
+    #: fixed ``overlap_capacity`` (equal-shape overlap family): 1.0 for real
+    #: overlap rows, 0.0 for the cyclic-duplicate padding rows. ``None`` means
+    #: every aligned row is real (the historical exact-N_o layout).
+    aligned_mask: Optional[jnp.ndarray] = None
 
 
 def split_image_halves(x: jnp.ndarray, num_parties: int = 2) -> List[jnp.ndarray]:
@@ -108,8 +113,19 @@ def make_vfl_partition(
     seed: int = 0,
     num_classes: Optional[int] = None,
     image_grid: Optional[Sequence[int]] = None,
+    overlap_capacity: Optional[int] = None,
 ) -> VerticalSplit:
-    """Sample N_o aligned rows; split the rest evenly into private pools."""
+    """Sample N_o aligned rows; split the rest evenly into private pools.
+
+    ``overlap_capacity`` builds the equal-shape variant (DESIGN.md §14): the
+    aligned block always holds ``capacity`` rows — the first ``overlap_size``
+    are the real overlap, the remainder are cyclic duplicates of them — and
+    ``aligned_mask`` marks which rows are real. The first ``capacity`` rows
+    of the shuffled training pool are *reserved* for the aligned block
+    regardless of ``overlap_size``, so every member of one equal-shape family
+    (same capacity, different N_o) sees identical private pools and identical
+    array shapes, letting the engine stack them into one program.
+    """
     n = x.shape[0]
     rng = np.random.RandomState(seed)
     perm = rng.permutation(n)
@@ -120,8 +136,22 @@ def make_vfl_partition(
     # is aligned and the per-party private pools are empty (0, d_k) arrays —
     # the engine schedules zero-width unlabeled batches for them
     assert overlap_size <= len(rest), "not enough rows for this overlap"
-    aligned_idx = rest[:overlap_size]
-    pool = rest[overlap_size:]
+    aligned_mask = None
+    if overlap_capacity is not None:
+        capacity = int(overlap_capacity)
+        assert overlap_size <= capacity, (overlap_size, capacity)
+        assert capacity <= len(rest), "not enough rows for this capacity"
+        real = rest[:overlap_size]
+        pad = capacity - overlap_size
+        aligned_idx = np.concatenate(
+            [real, real[np.arange(pad) % overlap_size]]) if pad else real
+        aligned_mask = jnp.concatenate(
+            [jnp.ones(overlap_size, jnp.float32),
+             jnp.zeros(pad, jnp.float32)])
+        pool = rest[capacity:]   # reserve the full capacity: equal pools
+    else:
+        aligned_idx = rest[:overlap_size]
+        pool = rest[overlap_size:]
     per = len(pool) // num_parties
     party_idx = [pool[k * per:(k + 1) * per] for k in range(num_parties)]
 
@@ -143,4 +173,5 @@ def make_vfl_partition(
         test_labels=jnp.asarray(y)[test_idx],
         num_classes=num_classes,
         unaligned_labels=unaligned_labels,
+        aligned_mask=aligned_mask,
     )

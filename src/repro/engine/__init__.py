@@ -29,7 +29,8 @@ from repro.engine.local_ssl import (
     train_party_ssl,
 )
 from repro.engine.dispatch import estimate_missing, pseudo_labels
-from repro.engine import batched, iterative, sessions
+from repro.engine import batched, iterative, parallel, sessions
+from repro.engine.parallel import device_fold, mesh_key, resolve_mesh
 from repro.engine.batched import (
     fedbcd_sessions_seeds,
     fedcvt_sessions_seeds,
@@ -48,8 +49,12 @@ from repro.engine.sessions import (clear_session_cache, session_cache_stats,
 __all__ = [
     "batched",
     "iterative",
+    "parallel",
     "sessions",
     "clear_session_cache",
+    "device_fold",
+    "mesh_key",
+    "resolve_mesh",
     "session_cache_stats",
     "session_cache_stats_by_domain",
     "PartyParams",

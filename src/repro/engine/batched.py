@@ -52,7 +52,7 @@ from typing import Any, List, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.engine import sessions
+from repro.engine import parallel, sessions
 from repro.engine.local_ssl import (PartyParams, PartyTask, SSLHParams,
                                     tasks_are_homogeneous, train_clients_ssl,
                                     train_parties_ssl_vmapped)
@@ -74,7 +74,7 @@ def unflatten_seed_results(flat: Sequence[Any], num_seeds: int,
 # ------------------------------------------------------- SSL: the S·K fold
 def train_clients_ssl_seeds(keys: Sequence[jax.Array],
                             tasks_per_seed: Sequence[Sequence[PartyTask]],
-                            hp: SSLHParams, mode: str = "auto"
+                            hp: SSLHParams, mode: str = "auto", mesh=None
                             ) -> Tuple[List[List[PartyParams]],
                                        List[List[dict]], List[str]]:
     """Every seed's every party's SSL session; returns per-seed
@@ -90,7 +90,7 @@ def train_clients_ssl_seeds(keys: Sequence[jax.Array],
     num_seeds = len(tasks_per_seed)
     if num_seeds == 1:
         params, metrics, vmapped = train_clients_ssl(
-            keys[0], tasks_per_seed[0], hp, mode=mode)
+            keys[0], tasks_per_seed[0], hp, mode=mode, mesh=mesh)
         return [params], [metrics], ["vmap" if vmapped else "python"]
 
     if mode not in ("auto", "vmap", "python"):
@@ -112,7 +112,8 @@ def train_clients_ssl_seeds(keys: Sequence[jax.Array],
                              "tasks across every seed of the fold; use "
                              "mode='auto' or 'python'")
         flat_keys = [kk for key in keys for kk in jax.random.split(key, k)]
-        params, metrics = train_parties_ssl_vmapped(flat_keys, flat, hp)
+        params, metrics = train_parties_ssl_vmapped(flat_keys, flat, hp,
+                                                    mesh=mesh)
         return (unflatten_seed_results(params, num_seeds, k),
                 unflatten_seed_results(metrics, num_seeds, k),
                 ["vmap"] * num_seeds)
@@ -130,8 +131,8 @@ def train_clients_ssl_seeds(keys: Sequence[jax.Array],
 def pseudo_labels_seeds(keys: Sequence[jax.Array],
                         partial_grads: Sequence[jnp.ndarray],
                         num_classes: int, kmeans_iters: int = 25,
-                        use_kernels: bool = False, restarts: int = 4
-                        ) -> List[jnp.ndarray]:
+                        use_kernels: bool = False, restarts: int = 4,
+                        mesh=None) -> List[jnp.ndarray]:
     """Step ③ for a flat (seed-major) batch of gradient matrices: one
     cached ``vmap`` of the jittable k-means when every entry shares one
     shape — bit-identical per entry to the per-call path. The Pallas
@@ -144,18 +145,23 @@ def pseudo_labels_seeds(keys: Sequence[jax.Array],
                 for k, g in zip(keys, partial_grads)]
     from repro.core import clustering                 # deferred: core imports engine
 
+    mesh = parallel.resolve_mesh(mesh)
+    n = len(partial_grads)
+
     def build():
         def one(key, grads):
             return clustering.gradient_pseudo_labels(
                 key, grads, num_classes, kmeans_iters, use_kernel=False,
                 restarts=restarts)
 
-        return jax.jit(jax.vmap(one))
+        return parallel.shard_jit(jax.vmap(one), mesh, donate_params=False)
 
     fn = sessions.cached_session(
-        "kmeans", ("vmap", num_classes, kmeans_iters, restarts), build)
-    out = fn(jnp.stack(list(keys)), jnp.stack(list(partial_grads)))
-    return [out[i] for i in range(out.shape[0])]
+        "kmeans", ("vmap", num_classes, kmeans_iters, restarts,
+                   parallel.mesh_key(mesh)), build)
+    out = fn(jnp.stack(parallel.pad_entries(keys, mesh)),
+             jnp.stack(parallel.pad_entries(partial_grads, mesh)))
+    return [out[i] for i in range(n)]
 
 
 # ------------------------------------------- iterative baselines: seed fold
@@ -197,7 +203,7 @@ def _assert_seed_models_equal(extractors_per_seed, classifiers) -> None:
 def splitnn_sessions_seeds(extractors_per_seed, classifiers,
                            hp, carries: Sequence[Any],
                            xs_per_seed, ys, schedules,
-                           mode: str = "auto"):
+                           mode: str = "auto", mesh=None):
     """S seeds of one SplitNN session as ONE folded program.
 
     ``extractors_per_seed[s]`` / ``classifiers[s]`` are each seed's models
@@ -214,14 +220,14 @@ def splitnn_sessions_seeds(extractors_per_seed, classifiers,
         iterative.session_cache_key("splitnn", exts, clf, hp),
         lambda: iterative.make_splitnn_step_fn(exts, clf, hp),
         stack_carries(carries), _stack_party_data(xs_per_seed),
-        jnp.stack(list(ys)), jnp.stack(list(schedules)), mode)
+        jnp.stack(list(ys)), jnp.stack(list(schedules)), mode, mesh=mesh)
     return unstack_carries(carry, len(carries)), losses
 
 
 def fedcvt_sessions_seeds(extractors_per_seed, classifiers, hp,
                           carries: Sequence[Any], xs_per_seed, ys,
                           schedules, xs_u_per_seed, u_schedules,
-                          mode: str = "auto"):
+                          mode: str = "auto", mesh=None):
     """S seeds of one FedCVT-style session as ONE folded program; the
     per-party unaligned pools and their draw schedules stack on the same
     seed axis. Returns ``(per-seed carries, (S, iters) losses)``."""
@@ -237,13 +243,13 @@ def fedcvt_sessions_seeds(extractors_per_seed, classifiers, hp,
         jnp.stack(list(ys)), jnp.stack(list(schedules)), mode,
         xs_u=_stack_party_data(xs_u_per_seed),
         u_schedules=tuple(jnp.stack([us[k] for us in u_schedules])
-                          for k in range(num_parties)))
+                          for k in range(num_parties)), mesh=mesh)
     return unstack_carries(carry, len(carries)), losses
 
 
 def fedbcd_sessions_seeds(extractors_per_seed, classifiers, hp, q: int,
                           carries: Sequence[Any], xs_per_seed, ys,
-                          schedules, mode: str = "auto"):
+                          schedules, mode: str = "auto", mesh=None):
     """S seeds of one FedBCD-p session (Q local updates per round) as ONE
     folded program. Returns ``(per-seed carries, (S, rounds) losses)``."""
     from repro.engine import iterative        # deferred: sibling module
@@ -254,14 +260,15 @@ def fedbcd_sessions_seeds(extractors_per_seed, classifiers, hp, q: int,
         iterative.session_cache_key("fedbcd", exts, clf, hp, q),
         lambda: iterative.make_fedbcd_step_fn(exts, clf, hp, q),
         stack_carries(carries), _stack_party_data(xs_per_seed),
-        jnp.stack(list(ys)), jnp.stack(list(schedules)), mode)
+        jnp.stack(list(ys)), jnp.stack(list(schedules)), mode, mesh=mesh)
     return unstack_carries(carry, len(carries)), losses
 
 
 # --------------------------------------------- server fits: vmapped sessions
 def fit_sessions_batched(model, lr: float, params_list: Sequence[Any],
                          xs: Sequence[jnp.ndarray], ys: Sequence[jnp.ndarray],
-                         schedules: Sequence[jnp.ndarray]) -> List[Any]:
+                         schedules: Sequence[jnp.ndarray],
+                         mesh=None) -> List[Any]:
     """A batch of server classifier fits as ONE cached vmapped ``lax.scan``
     session (domain ``"server_fit"``, keyed next to the plain session).
 
@@ -272,12 +279,15 @@ def fit_sessions_batched(model, lr: float, params_list: Sequence[Any],
     axis is anonymous, exactly like the SSL fold's."""
     from repro.core.server import _fit_session        # deferred: core imports engine
 
+    mesh = parallel.resolve_mesh(mesh)
+    n = len(params_list)
     fitv = sessions.cached_session(
-        "server_fit", ("vmap", sessions.model_key(model), float(lr)),
-        lambda: jax.jit(jax.vmap(_fit_session(model, lr)),
-                        donate_argnums=(0,)))
-    stacked = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *params_list)
-    out = fitv(stacked, jnp.stack(list(xs)), jnp.stack(list(ys)),
-               jnp.stack(list(schedules)))
-    return [jax.tree_util.tree_map(lambda a: a[i], out)
-            for i in range(len(params_list))]
+        "server_fit", ("vmap", sessions.model_key(model), float(lr),
+                       parallel.mesh_key(mesh)),
+        lambda: parallel.shard_jit(jax.vmap(_fit_session(model, lr)), mesh))
+    stacked = jax.tree_util.tree_map(
+        lambda *a: jnp.stack(a), *parallel.pad_entries(params_list, mesh))
+    out = fitv(stacked, jnp.stack(parallel.pad_entries(xs, mesh)),
+               jnp.stack(parallel.pad_entries(ys, mesh)),
+               jnp.stack(parallel.pad_entries(schedules, mesh)))
+    return [jax.tree_util.tree_map(lambda a: a[i], out) for i in range(n)]

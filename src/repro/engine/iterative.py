@@ -313,6 +313,7 @@ def run_iterative_session_seeds(
     mode: str = "auto",
     xs_u: Optional[Sequence[jnp.ndarray]] = None,
     u_schedules: Optional[Sequence[jnp.ndarray]] = None,
+    mesh=None,
 ):
     """The seed-axis fold (DESIGN.md §11): run every seed's whole session
     as one program.
@@ -330,10 +331,19 @@ def run_iterative_session_seeds(
     stacked shape). ``"python"`` loops seeds × steps over the cached
     jitted step — byte-for-byte the historical per-seed fallback.
 
+    With a resolved ``mesh`` the ``"scan"`` path shards the seed axis over
+    the device mesh (DESIGN.md §14): stacked arguments pad to a
+    device-count multiple with copies of seed 0, the vmap-of-scan runs
+    under ``shard_map``, and results are stripped back host-side. The
+    cache key gains the mesh identity; ``"python"`` ignores the mesh.
+
     Returns ``(carry, losses)`` with the same stacking and ``losses`` of
     shape ``(S, iters)``.
     """
+    from repro.engine import parallel        # sibling: mesh plumbing
+
     mode = resolve_mode(mode)
+    mesh = parallel.resolve_mesh(mesh)
     xs = tuple(xs)
     num_seeds = schedule.shape[0]
     if schedule.shape[1] == 0:               # zero iterations: no-op session
@@ -365,7 +375,10 @@ def run_iterative_session_seeds(
                 jnp.stack(out_losses))
 
     # "scan": the whole multi-seed session is one jitted program with a
-    # donated stacked carry — vmap's batch axis IS the seed axis.
+    # donated stacked carry — vmap's batch axis IS the seed axis. Under a
+    # mesh that axis pads to a device-count multiple and shards (§14).
+    pad = parallel.pad_width(num_seeds, mesh)
+    mkey = (parallel.mesh_key(mesh),)
     if has_u:
         def build():
             step = make_step()
@@ -378,10 +391,15 @@ def run_iterative_session_seeds(
 
                 return jax.lax.scan(body, carry, (schedule, u_scheds))
 
-            return jax.jit(jax.vmap(session), donate_argnums=(0,))
+            return parallel.shard_jit(jax.vmap(session), mesh)
 
-        session = _cached(("scan", True) + cache_key, build)
-        return session(carry, xs, y, schedule, xs_u, u_schedules)
+        session = _cached(("scan", True) + cache_key + mkey, build)
+        out, losses = session(
+            parallel.pad_stacked(carry, pad), parallel.pad_stacked(xs, pad),
+            parallel.pad_stacked(y, pad), parallel.pad_stacked(schedule, pad),
+            parallel.pad_stacked(xs_u, pad),
+            parallel.pad_stacked(u_schedules, pad))
+        return parallel.strip_stacked(out, num_seeds), losses[:num_seeds]
 
     def build():
         step = make_step()
@@ -392,10 +410,13 @@ def run_iterative_session_seeds(
 
             return jax.lax.scan(body, carry, schedule)
 
-        return jax.jit(jax.vmap(session), donate_argnums=(0,))
+        return parallel.shard_jit(jax.vmap(session), mesh)
 
-    session = _cached(("scan", False) + cache_key, build)
-    return session(carry, xs, y, schedule)
+    session = _cached(("scan", False) + cache_key + mkey, build)
+    out, losses = session(
+        parallel.pad_stacked(carry, pad), parallel.pad_stacked(xs, pad),
+        parallel.pad_stacked(y, pad), parallel.pad_stacked(schedule, pad))
+    return parallel.strip_stacked(out, num_seeds), losses[:num_seeds]
 
 
 def run_iterative_session(

@@ -310,7 +310,8 @@ def parties_are_homogeneous(extractors: Sequence[Model],
 
 
 def train_parties_ssl_vmapped(keys: Sequence[jax.Array],
-                              tasks: Sequence[PartyTask], hp: SSLHParams
+                              tasks: Sequence[PartyTask], hp: SSLHParams,
+                              mesh=None
                               ) -> Tuple[List[PartyParams], List[dict]]:
     """All parties' SSL sessions as ONE jitted program: ``vmap`` over the
     stacked client axis, ``lax.scan`` over the flattened epoch×batch
@@ -319,15 +320,26 @@ def train_parties_ssl_vmapped(keys: Sequence[jax.Array],
     The compiled session is cached (``engine.sessions``, domain ``"ssl"``)
     on semantic model identity + SSLConfig + optimizer hyper-parameters;
     params, data, masks, and the schedule all travel as arguments, so a
-    sweep's later seeds/scenario points of equal shapes re-serve it."""
+    sweep's later seeds/scenario points of equal shapes re-serve it.
+
+    With a resolved ``mesh`` the stacked client axis additionally shards
+    across devices (DESIGN.md §14): the entry list pads to a device-count
+    multiple with copies of entry 0, the session runs under ``shard_map``,
+    and the padded tail is stripped host-side. The cache key gains the
+    mesh identity (axis names + shape — never the batch width)."""
+    from repro.engine import parallel        # sibling: mesh plumbing
+
+    mesh = parallel.resolve_mesh(mesh)
     t0 = tasks[0]
     k = len(tasks)
     tx = make_ssl_optimizer(hp)
 
+    tasks = parallel.pad_entries(tasks, mesh)
+    keys = parallel.pad_entries(list(keys), mesh)
     scheds = [build_schedule(kk, t.x_labeled.shape[0], t.x_unlabeled.shape[0], hp)
               for kk, t in zip(keys, tasks)]
     if scheds[0].step_keys.shape[0] == 0:          # epochs == 0: no-op session
-        return [t.params for t in tasks], [{} for _ in tasks]
+        return [t.params for t in tasks[:k]], [{} for _ in tasks[:k]]
     stacked_params = _stack([t.params for t in tasks])
     x_l = jnp.stack([t.x_labeled for t in tasks])
     y_l = jnp.stack([t.y_pseudo for t in tasks])
@@ -365,12 +377,13 @@ def train_parties_ssl_vmapped(keys: Sequence[jax.Array],
 
         axes = tuple(None if arg is None else 0
                      for arg in (0, fm, 0, 0, 0, m_l, m_u, 0, 0, 0))
-        return jax.jit(jax.vmap(one_party, in_axes=axes), donate_argnums=(0,))
+        return parallel.shard_jit(jax.vmap(one_party, in_axes=axes), mesh)
 
     fn = sessions.cached_session(
         "ssl",
         ("vmap", sessions.model_key(t0.extractor), sessions.model_key(t0.head),
-         t0.ssl_cfg, _optimizer_key(hp), fm is None, m_l is None, m_u is None),
+         t0.ssl_cfg, _optimizer_key(hp), fm is None, m_l is None, m_u is None,
+         parallel.mesh_key(mesh)),
         build)
     new_params, metrics = fn(stacked_params, fm, x_l, y_l, x_u, m_l, m_u,
                              idx_l, idx_u, step_keys)
@@ -382,7 +395,7 @@ def train_parties_ssl_vmapped(keys: Sequence[jax.Array],
 
 # ---------------------------------------------------------------- dispatcher
 def train_clients_ssl(key: jax.Array, tasks: Sequence[PartyTask],
-                      hp: SSLHParams, mode: str = "auto"
+                      hp: SSLHParams, mode: str = "auto", mesh=None
                       ) -> Tuple[List[PartyParams], List[dict], bool]:
     """Run every party's local-SSL session; returns (params, metrics, vmapped).
 
@@ -390,6 +403,8 @@ def train_clients_ssl(key: jax.Array, tasks: Sequence[PartyTask],
     fast path; raises on heterogeneous tasks), or "python" (force the
     per-client fallback loop). Per-party keys are split identically for
     both paths, so "vmap" and "python" agree numerically to ~1e-5.
+    ``mesh`` (optional, DESIGN.md §14) shards the fast path's stacked
+    client axis across devices; the fallback loop ignores it.
     """
     if mode not in ("auto", "vmap", "python"):
         raise ValueError(f"unknown engine mode {mode!r}")
@@ -412,7 +427,7 @@ def train_clients_ssl(key: jax.Array, tasks: Sequence[PartyTask],
     # explicit "vmap" always honors the request (even K=1); "auto" only
     # pays the stacked-program trace when there is >1 party to batch
     if mode == "vmap" or (mode == "auto" and homogeneous and len(tasks) > 1):
-        params, metrics = train_parties_ssl_vmapped(keys, tasks, hp)
+        params, metrics = train_parties_ssl_vmapped(keys, tasks, hp, mesh=mesh)
         return params, metrics, True
     params_list, metrics_list = [], []
     for kk, t in zip(keys, tasks):

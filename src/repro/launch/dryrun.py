@@ -1,7 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                           + " --xla_force_host_platform_device_count=512").strip()
-
 """Multi-pod dry-run: lower + compile every (arch × input-shape × mesh)
 combination against the production meshes with ShapeDtypeStruct inputs —
 no weight or activation is ever allocated. Produces the §Dry-run records
@@ -12,9 +8,14 @@ Usage:
   python -m repro.launch.dryrun --arch gemma-7b --shape train_4k
   python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
 """
+from repro.launch.mesh import forced_host_devices
+
+forced_host_devices(512)   # BEFORE the jax backend initializes below
+
 import argparse
 import dataclasses
 import json
+import os
 import re
 import time
 import traceback

@@ -2,7 +2,42 @@
 touches jax device state)."""
 from __future__ import annotations
 
+import os
+import re
+
 import jax
+
+BATCH_AXIS = "batch"
+
+
+def forced_host_devices(count: int) -> None:
+    """Force the CPU backend to expose ``count`` host devices.
+
+    Idempotent XLA_FLAGS edit: replaces any existing
+    ``--xla_force_host_platform_device_count`` value rather than appending a
+    second one. Only effective if called before the CPU backend initializes
+    (i.e. before the first jax array/device query in the process).
+    """
+    flag = f"--xla_force_host_platform_device_count={int(count)}"
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" in flags:
+        flags = re.sub(r"--xla_force_host_platform_device_count=\d+",
+                       flag, flags)
+    else:
+        flags = (flags + " " + flag).strip()
+    os.environ["XLA_FLAGS"] = flags
+
+
+def make_batch_mesh(num_devices: int | None = None):
+    """1-D mesh over the engine's anonymous stacked batch axis (DESIGN.md
+    §14). ``None`` takes every visible device."""
+    n = jax.device_count() if num_devices is None else int(num_devices)
+    if n > jax.device_count():
+        raise ValueError(
+            f"requested a {n}-device batch mesh but only "
+            f"{jax.device_count()} device(s) are visible — on CPU, call "
+            "repro.launch.mesh.forced_host_devices before jax initializes")
+    return jax.make_mesh((n,), (BATCH_AXIS,))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -16,6 +16,10 @@ Families:
   SSL sees thousands of pool rows — the regime where one-shot VFL beats
   iterative VFL outright (the un-xfail'd headline test and the bench
   frontier's smoke gate both pin it).
+* ``hard/overlap-N-eq``   — equal-shape variants of the hard family: the
+  aligned block is padded to a fixed 64-row capacity with cyclic duplicates
+  under a validity mask, so different-N_o members share one shape signature
+  and stack into a single scenario-folded group (DESIGN.md §14).
 * ``image/halves`` and ``image/patch-4`` — image modality split into
   vertical strips (paper §5.1) or a 2×2 patch grid (4 parties).
 """
@@ -107,6 +111,35 @@ for _n_o in (32, 64):
         smoke_overlap=_n_o,
         description=("hardened limited-overlap task: wide clusters, "
                      "nuisance dims, label flips"),
+    ))
+
+for _n_o in (32, 64):
+    register(ScenarioSpec(
+        # equal-shape variant of the hard family (DESIGN.md §14): the aligned
+        # block is always materialized at the family capacity (64 rows — real
+        # overlap first, cyclic duplicates after, validity mask alongside) and
+        # the first 64 pool rows are reserved regardless of N_o, so BOTH
+        # members share one shape signature and literally stack into one
+        # scenario-folded group (the grouping test pins the pair)
+        name=f"hard/overlap-{_n_o}-eq",
+        modality="tabular",
+        generator="cluster_tabular",
+        overlap=_n_o,
+        overlap_capacity=64,
+        num_samples=3000,
+        gen_params=(("num_informative", 24), ("num_nuisance", 16),
+                    ("num_clusters", 12), ("cluster_std", 0.3),
+                    ("nuisance_std", 2.0), ("label_noise", 0.15)),
+        feature_sizes=(20, 20),
+        rep_dim=16,
+        ssl_params=(("confidence_threshold", 0.8),),
+        budgets=(("client_epochs", 80), ("server_epochs", 40),
+                 ("iterations", 400)),
+        tags=("hard", "tabular", "eq"),
+        smoke_samples=3000,
+        smoke_overlap=64,   # == capacity: smoke keeps the padded shape equal
+        description=(f"hard task at fixed 64-row aligned capacity, N_o={_n_o} "
+                     "real rows + cyclic padding under a validity mask"),
     ))
 
 register(ScenarioSpec(

@@ -35,10 +35,14 @@ from repro.scenarios.registry import ScenarioBundle, ScenarioSpec
 def split_signature(split) -> tuple:
     """Full shape signature of a built vertical split — the stacking
     precondition on the data side (matches the one ``run_seeds`` checks)."""
+    mask = getattr(split, "aligned_mask", None)
     return (tuple(x.shape for x in split.aligned),
             tuple(x.shape for x in split.unaligned),
             tuple(x.shape for x in split.test_aligned),
-            split.labels.shape, split.test_labels.shape, split.num_classes)
+            split.labels.shape, split.test_labels.shape, split.num_classes,
+            # masked (equal-shape capacity) and unmasked splits never stack:
+            # the mask changes the SSL loss structure even at equal shapes
+            None if mask is None else tuple(mask.shape))
 
 
 def _closure_key(fn) -> tuple:

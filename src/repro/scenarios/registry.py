@@ -49,6 +49,11 @@ class ScenarioSpec:
     generator: str                # key into GENERATORS
     overlap: int                  # N_o
     num_samples: int
+    #: fixed aligned-block capacity for the equal-shape overlap family
+    #: (DESIGN.md §14): the split always materializes this many aligned rows
+    #: (real overlap first, cyclic duplicates after, validity mask alongside),
+    #: so members with different N_o share one shape signature and stack.
+    overlap_capacity: Optional[int] = None
     num_parties: int = 2
     gen_params: Tuple[Tuple[str, Any], ...] = ()
     feature_sizes: Optional[Tuple[int, ...]] = None   # tabular block sizes
@@ -72,10 +77,16 @@ class ScenarioSpec:
 
     def smoke(self) -> "ScenarioSpec":
         """CI-speed variant of the same condition: capped overlap and sample
-        count, identical generator/architecture/SSL parameters."""
+        count, identical generator/architecture/SSL parameters. The
+        equal-shape capacity shrinks with the overlap cap so the family's
+        members still share one (smaller) padded shape."""
+        capacity = self.overlap_capacity
+        if capacity is not None:
+            capacity = min(capacity, self.smoke_overlap)
         return replace(self,
                        overlap=min(self.overlap, self.smoke_overlap),
-                       num_samples=min(self.num_samples, self.smoke_samples))
+                       num_samples=min(self.num_samples, self.smoke_samples),
+                       overlap_capacity=capacity)
 
 
 @dataclass
@@ -149,7 +160,8 @@ def build(name_or_spec, seed: int = 0, smoke: bool = False) -> ScenarioBundle:
     split = vertical.make_vfl_partition(
         x, y, overlap_size=spec.overlap, num_parties=spec.num_parties,
         feature_sizes=spec.feature_sizes, seed=seed,
-        num_classes=num_classes, image_grid=spec.image_grid)
+        num_classes=num_classes, image_grid=spec.image_grid,
+        overlap_capacity=spec.overlap_capacity)
     return ScenarioBundle(spec=spec, split=split,
                           extractors=_make_extractors(spec),
                           ssl_cfgs=_make_ssl_cfgs(spec))

@@ -324,6 +324,12 @@ def test_known_catalog_groups():
               "credit/overlap-256", "credit/label-noise"]
     assert len({group_of[n] for n in family}) == 1
     assert group_of["hard/overlap-32"] != group_of["hard/overlap-64"]
+    # the equal-shape variants exist precisely to close that gap: a fixed
+    # 64-row aligned capacity + validity mask gives both members ONE shape
+    # signature, so they stack — while staying apart from the unmasked
+    # hard/overlap-64 (same shapes, but the mask changes the loss)
+    assert group_of["hard/overlap-32-eq"] == group_of["hard/overlap-64-eq"]
+    assert group_of["hard/overlap-64-eq"] != group_of["hard/overlap-64"]
     for loner in ("credit/feature-skew", "credit/parties-4",
                   "credit/parties-8", "image/halves", "image/patch-4"):
         assert sum(1 for n in _NAMES if group_of[n] == group_of[loner]) == 1

@@ -59,7 +59,14 @@ def test_every_scenario_builds_and_runs_one_shot(name):
     spec = bundle.spec
     assert len(bundle.split.aligned) == spec.num_parties
     assert len(bundle.extractors) == spec.num_parties
-    assert bundle.split.labels.shape[0] == spec.overlap
+    if spec.overlap_capacity is None:
+        assert bundle.split.labels.shape[0] == spec.overlap
+        assert bundle.split.aligned_mask is None
+    else:
+        # equal-shape family (DESIGN.md §14): the aligned block is padded
+        # to the fixed capacity; the mask marks the N_o real rows
+        assert bundle.split.labels.shape[0] == spec.overlap_capacity
+        assert int(bundle.split.aligned_mask.sum()) == spec.overlap
     res = run_one_shot(jax.random.PRNGKey(0), bundle.split, bundle.extractors,
                        bundle.ssl_cfgs,
                        ProtocolConfig(client_epochs=1, server_epochs=1))
