@@ -130,16 +130,22 @@ def _aggregate_row(seed_rows) -> dict:
     return row
 
 
-def _runner_cfgs(spec, methods=METHODS, devices=None) -> dict:
+def _runner_cfgs(spec, methods=METHODS, devices=None,
+                 use_kernels: bool = False) -> dict:
     """Resolve every method through THE runner registry
     (``repro.core.runners``): the entry supplies the runner callable, its
     ``kind`` picks the config family the scenario budgets parameterize.
     ``devices`` threads the launch mesh (DESIGN.md §14) into both config
-    families so every folded sweep shards its stacked S·C·K axis."""
+    families so every folded sweep shards its stacked S·C·K axis;
+    ``use_kernels`` flips the protocol methods onto the Pallas kernel
+    route (batched grids over the same stacked axis, DESIGN.md §15 — the
+    iterative baselines have no kernel-served hot-spot, so their config is
+    untouched)."""
     pcfg = ProtocolConfig(
         client_epochs=spec.budget("client_epochs", 8),
         server_epochs=spec.budget("server_epochs", 30),
         mesh=devices,
+        use_kernels=use_kernels,
     )
     if spec.fewshot_threshold is not None:
         pcfg = dataclasses.replace(pcfg,
@@ -158,7 +164,7 @@ def build_bundles(spec, seeds, smoke: bool):
 
 
 def run_scenario_group(bundles_per_scenario, seeds, methods=METHODS,
-                       devices=None):
+                       devices=None, use_kernels: bool = False):
     """Run every method on one partitioner GROUP of scenarios over all
     ``seeds``: each method's whole group — C scenarios × S seeds — goes
     through ``run_scenarios_seeds`` as ONE folded sweep (DESIGN.md §12;
@@ -170,7 +176,8 @@ def run_scenario_group(bundles_per_scenario, seeds, methods=METHODS,
     """
     specs = [bs[0].spec for bs in bundles_per_scenario]
     group_size = len(specs)
-    runner_cfgs = _runner_cfgs(specs[0], methods, devices=devices)
+    runner_cfgs = _runner_cfgs(specs[0], methods, devices=devices,
+                               use_kernels=use_kernels)
     # the engine's own fast-path precondition: apply-fn identity + equal
     # SSL configs + equal per-party feature shapes. Heterogeneous feature
     # blocks (e.g. credit/feature-skew) — or equal-dim parties with
@@ -210,6 +217,7 @@ def run_scenario_group(bundles_per_scenario, seeds, methods=METHODS,
                     cache_misses=misses,          # whole-group fresh builds
                     group_size=group_size,        # partitioner ground truth
                     vmap_eligible=vmap_eligible,
+                    use_kernels=use_kernels,
                     overlap=spec.overlap,
                     num_parties=spec.num_parties,
                     modality=spec.modality,
@@ -235,11 +243,13 @@ def run_scenario_group(bundles_per_scenario, seeds, methods=METHODS,
     return rows
 
 
-def run_scenario(spec, seeds, smoke: bool, methods=METHODS, devices=None):
+def run_scenario(spec, seeds, smoke: bool, methods=METHODS, devices=None,
+                 use_kernels: bool = False):
     """Run every method on ONE scenario over all ``seeds`` — the width-1
     group case of :func:`run_scenario_group`."""
     return run_scenario_group([build_bundles(spec, seeds, smoke)], seeds,
-                              methods=methods, devices=devices)
+                              methods=methods, devices=devices,
+                              use_kernels=use_kernels)
 
 
 def _check_margins(name: str, method_rows: dict, its: dict, label: str,
@@ -266,7 +276,7 @@ def _check_margins(name: str, method_rows: dict, its: dict, label: str,
 
 
 def check_gate(rows, baseline_path: str = BASELINE_PATH,
-               devices=None) -> list:
+               devices=None, use_kernels: bool = False) -> list:
     """The CI regression gate. Returns a list of violation strings.
 
     Point estimates upgraded to seed statistics: the one-shot-vs-iterative
@@ -279,6 +289,13 @@ def check_gate(rows, baseline_path: str = BASELINE_PATH,
     every per-seed row that trained on a folded engine path ("vmap" or
     "scan") to record ``device_fold == devices`` — the mesh must not be
     silently dropped — and every Python-fallback row to record 1.
+
+    ``use_kernels`` (a ``--use-kernels`` sweep) requires the kernel path to
+    have kept the fold (DESIGN.md §15): every stackable protocol row must
+    record ``kernel_fold == seed_fold · scenario_fold · num_parties`` (the
+    step-③ k-means fold over the whole flat S·C·K batch — no per-entry
+    fallback) and every few-shot row ``sdpa_fold == seed_fold ·
+    scenario_fold`` (③' folded over the stacked seed axis).
     """
     problems = []
     per_seed = [r for r in rows if not r.get("aggregate")]
@@ -286,6 +303,31 @@ def check_gate(rows, baseline_path: str = BASELINE_PATH,
 
     with open(baseline_path) as fh:
         baseline = json.load(fh)
+
+    if use_kernels:
+        for r in per_seed:
+            if r["method"] not in ("one_shot", "few_shot") \
+                    or not r.get("vmap_eligible", False):
+                continue   # ragged party zoos legitimately fall back
+            flat = r.get("seed_fold", 1) * r.get("scenario_fold", 1)
+            want_km = flat * r.get("num_parties", 1)
+            if r.get("kernel_fold") != want_km:
+                problems.append(
+                    f"{r['scenario']} seed {r['seed']}: {r['method']} ran "
+                    f"kernel_fold={r.get('kernel_fold')} under --use-kernels "
+                    f"(expected {want_km} = seed_fold x scenario_fold x "
+                    f"num_parties"
+                    + (f"; fallback: {r['kernel_fallback']!r}"
+                       if r.get("kernel_fallback") else "")
+                    + ") — the step-③ k-means dropped the batched "
+                    f"kernel grid"
+                )
+            if r["method"] == "few_shot" and r.get("sdpa_fold") != flat:
+                problems.append(
+                    f"{r['scenario']} seed {r['seed']}: few_shot ran "
+                    f"sdpa_fold={r.get('sdpa_fold')} under --use-kernels "
+                    f"(expected {flat}) — ③' degraded to a per-seed loop"
+                )
 
     if devices is not None:
         for r in per_seed:
@@ -434,6 +476,14 @@ def main(argv=None) -> int:
     )
     ap.add_argument("--baseline", default=BASELINE_PATH)
     ap.add_argument(
+        "--use-kernels",
+        action="store_true",
+        help="route the protocol methods' hot-spots (step-③ k-means, "
+        "few-shot ③' SDPA) through the batched Pallas kernel grids "
+        "(DESIGN.md §15); --check-gate then also pins the kernel-fold "
+        "discipline (kernel_fold/sdpa_fold equal the stacked widths)",
+    )
+    ap.add_argument(
         "--devices",
         type=int,
         default=None,
@@ -477,7 +527,8 @@ def main(argv=None) -> int:
     rows = []
     for g in groups:
         rows.extend(run_scenario_group([bundles[i] for i in g.indices],
-                                       seeds, devices=args.devices))
+                                       seeds, devices=args.devices,
+                                       use_kernels=args.use_kernels))
 
     mesh = engine.resolve_mesh(args.devices)
     blob = {
@@ -485,6 +536,7 @@ def main(argv=None) -> int:
         "seed": args.seed,
         "seeds": seeds,
         "devices": args.devices,
+        "use_kernels": args.use_kernels,
         "mesh": None if mesh is None else {
             "axis_names": list(mesh.axis_names),
             "shape": list(mesh.devices.shape)},
@@ -498,7 +550,8 @@ def main(argv=None) -> int:
     print(f"wrote {args.out}: {len(rows)} rows in {blob['wall_s']:.0f}s")
 
     if args.check_gate:
-        problems = check_gate(rows, args.baseline, devices=args.devices)
+        problems = check_gate(rows, args.baseline, devices=args.devices,
+                              use_kernels=args.use_kernels)
         if problems:
             for p in problems:
                 print(f"GATE VIOLATION: {p}", file=sys.stderr)

@@ -5,12 +5,26 @@ the hot-spot shapes. On-TPU timing needs real hardware; here ``us_per_call``
 is the pure-jnp oracle (the XLA-fused baseline the Pallas kernel must beat
 on TPU), and ``derived`` records kernel/oracle max-abs error.
 
+Batched grids (DESIGN.md §15): for the two protocol hot-spots (k-means
+assignment, SDPA estimation) the fold-native entries are timed three ways —
+ONE ``(B, …)`` grid launch vs ``jax.vmap`` of the XLA reference vs B
+sequential single-instance kernel launches — so the crossover the ops.py
+headers cite is measured, not asserted. Under CPU interpret mode the
+absolute kernel numbers are interpretation overhead; the launch-count
+ratio (one dispatch vs B dispatches) is the portable signal.
+
 Engine: end-to-end wall time of one multi-client local-SSL session on the
 vmap-over-clients jitted fast path vs the per-client Python loop (both
 including trace/compile, i.e. what a protocol run actually pays) — the
-jitted path must win."""
+jitted path must win.
+
+``--out BENCH_kernels.json`` records every row (name, us_per_call, derived)
+plus backend/interpret context as a JSON blob.
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -26,7 +40,13 @@ def _time(fn, *args, iters=3):
     return (time.time() - t0) / iters * 1e6
 
 
-def bench_engine() -> None:
+def _emit(rows, name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}")
+    rows.append({"name": name, "us_per_call": round(us, 1),
+                 "derived": derived})
+
+
+def bench_engine(rows) -> None:
     """One homogeneous 4-party SSL session: vmap fast path vs Python loop."""
     from repro import engine
     from repro.core.ssl import SSLConfig
@@ -59,14 +79,86 @@ def bench_engine() -> None:
     us_python, _ = run("python")
     us_vmap, vmapped = run("vmap")
     assert vmapped
-    print(f"engine/ssl_python_loop/K{parties}e{hp.epochs},{us_python:.0f},")
-    print(f"engine/ssl_vmap_jit/K{parties}e{hp.epochs},{us_vmap:.0f},"
+    _emit(rows, f"engine/ssl_python_loop/K{parties}e{hp.epochs}", us_python)
+    _emit(rows, f"engine/ssl_vmap_jit/K{parties}e{hp.epochs}", us_vmap,
           f"speedup={us_python / us_vmap:.2f}x")
 
 
-def main() -> None:
+def bench_batched_grids(rows) -> None:
+    """The fold-native batched entries, three routes per kernel:
+
+    - ``grid``  — ONE (B, …) Pallas grid launch (the fold-native entry)
+    - ``vmap``  — jax.vmap of the pure-jnp XLA reference (the baseline the
+                  kernel must beat on TPU)
+    - ``seq``   — B sequential width-1 kernel launches (what the retired
+                  per-entry fallback used to pay: B dispatches + B pads)
+
+    Shapes are the ones the ops.py headers cite (B=8 ≙ a 2-seed × 1-group ×
+    4-party stacked fold). Agreement is gated here, not just recorded: the
+    batched grid must be bit-equal to the reference for k-means and ≤1e-5
+    for SDPA.
+    """
+    from repro.kernels.kmeans import ops as km_ops, ref as km_ref
+    from repro.kernels.sdpa_estimator import ops as sd_ops, ref as sd_ref
+
+    # k-means assignment, step-③ fold shape
+    b, n, d, c = 8, 2048, 128, 10
+    x = jax.random.normal(jax.random.PRNGKey(0), (b, n, d))
+    cen = jax.random.normal(jax.random.PRNGKey(1), (b, c, d))
+    grid_fn = jax.jit(km_ops.kmeans_assign_batched)
+    vmap_fn = jax.jit(jax.vmap(km_ref.kmeans_assign))
+
+    def km_seq(x, cen):
+        return [km_ops.kmeans_assign(x[i], cen[i]) for i in range(b)]
+
+    shape = f"B{b}x{n}x{d}x{c}"
+    us_grid = _time(grid_fn, x, cen)
+    us_vmap = _time(vmap_fn, x, cen)
+    us_seq = _time(km_seq, x, cen)
+    agree = float(jnp.mean(grid_fn(x, cen) == vmap_fn(x, cen)))
+    assert agree == 1.0, f"batched k-means grid != vmapped oracle ({agree})"
+    _emit(rows, f"kernel/kmeans_batched_grid/{shape}", us_grid,
+          f"agree={agree:.4f}")
+    _emit(rows, f"kernel/kmeans_batched_vmap_ref/{shape}", us_vmap,
+          f"grid_vs_vmap={us_vmap / us_grid:.2f}x")
+    _emit(rows, f"kernel/kmeans_batched_seq_launch/{shape}", us_seq,
+          f"grid_vs_seq={us_seq / us_grid:.2f}x")
+
+    # SDPA estimation, few-shot ③' fold shape
+    b, nu, no, d = 8, 4096, 256, 128
+    hu = jax.random.normal(jax.random.PRNGKey(0), (b, nu, d))
+    hoa = jax.random.normal(jax.random.PRNGKey(1), (b, no, d))
+    hob = jax.random.normal(jax.random.PRNGKey(2), (b, no, d))
+    grid_fn = jax.jit(sd_ops.sdpa_estimate_batched)
+    vmap_fn = jax.jit(jax.vmap(sd_ref.sdpa_estimate))
+
+    def sd_seq(hu, hoa, hob):
+        return [sd_ops.sdpa_estimate(hu[i], hoa[i], hob[i]) for i in range(b)]
+
+    shape = f"B{b}x{nu}x{no}x{d}"
+    us_grid = _time(grid_fn, hu, hoa, hob)
+    us_vmap = _time(vmap_fn, hu, hoa, hob)
+    us_seq = _time(sd_seq, hu, hoa, hob)
+    err = float(jnp.max(jnp.abs(grid_fn(hu, hoa, hob)
+                                - vmap_fn(hu, hoa, hob))))
+    assert err <= 1e-5, f"batched SDPA grid off the oracle by {err:.2e}"
+    _emit(rows, f"kernel/sdpa_batched_grid/{shape}", us_grid,
+          f"maxerr={err:.2e}")
+    _emit(rows, f"kernel/sdpa_batched_vmap_ref/{shape}", us_vmap,
+          f"grid_vs_vmap={us_vmap / us_grid:.2f}x")
+    _emit(rows, f"kernel/sdpa_batched_seq_launch/{shape}", us_seq,
+          f"grid_vs_seq={us_seq / us_grid:.2f}x")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None,
+                    help="write all rows as a JSON blob to this path")
+    args = ap.parse_args(argv)
+
+    rows: list = []
     print("name,us_per_call,derived")
-    bench_engine()
+    bench_engine(rows)
 
     # kmeans assignment: the paper's step-③ shape (N_o grads × C classes)
     from repro.kernels.kmeans import ops as km_ops, ref as km_ref
@@ -76,7 +168,7 @@ def main() -> None:
         ref_fn = jax.jit(km_ref.kmeans_assign)
         us = _time(ref_fn, x, cen)
         agree = float(jnp.mean(km_ops.kmeans_assign(x, cen) == ref_fn(x, cen)))
-        print(f"kernel/kmeans/{n}x{d}x{c},{us:.1f},agree={agree:.4f}")
+        _emit(rows, f"kernel/kmeans/{n}x{d}x{c}", us, f"agree={agree:.4f}")
 
     # SDPA estimator: the few-shot server shape (N_u >> N_o)
     from repro.kernels.sdpa_estimator import ops as sd_ops, ref as sd_ref
@@ -88,17 +180,20 @@ def main() -> None:
         us = _time(ref_fn, hu, hoa, hob)
         err = float(jnp.max(jnp.abs(sd_ops.sdpa_estimate(hu, hoa, hob)
                                     - ref_fn(hu, hoa, hob))))
-        print(f"kernel/sdpa/{nu}x{no}x{d},{us:.1f},maxerr={err:.2e}")
+        _emit(rows, f"kernel/sdpa/{nu}x{no}x{d}", us, f"maxerr={err:.2e}")
+
+    # the fold-native batched grids (DESIGN.md §15)
+    bench_batched_grids(rows)
 
     # fused rmsnorm: per-layer shape of the biggest assigned arch
     from repro.kernels.rmsnorm import ops as rn_ops, ref as rn_ref
-    for (rows, d) in [(4096, 1024), (2048, 4096)]:
-        x = jax.random.normal(jax.random.PRNGKey(0), (rows, d))
+    for (rows_, d) in [(4096, 1024), (2048, 4096)]:
+        x = jax.random.normal(jax.random.PRNGKey(0), (rows_, d))
         s = 1.0 + 0.1 * jax.random.normal(jax.random.PRNGKey(1), (d,))
         ref_fn = jax.jit(rn_ref.rms_norm)
         us = _time(ref_fn, x, s)
         err = float(jnp.max(jnp.abs(rn_ops.rms_norm(x, s) - ref_fn(x, s))))
-        print(f"kernel/rmsnorm/{rows}x{d},{us:.1f},maxerr={err:.2e}")
+        _emit(rows, f"kernel/rmsnorm/{rows_}x{d}", us, f"maxerr={err:.2e}")
 
     # decode attention: serving shape
     from repro.kernels.decode_attention import ops as da_ops, ref as da_ref
@@ -110,7 +205,16 @@ def main() -> None:
         us = _time(ref_fn, q, kc, vc)
         err = float(jnp.max(jnp.abs(da_ops.decode_attention(q, kc, vc)
                                     - ref_fn(q, kc, vc))))
-        print(f"kernel/decode_attn/b{b}h{h}s{s},{us:.1f},maxerr={err:.2e}")
+        _emit(rows, f"kernel/decode_attn/b{b}h{h}s{s}", us, f"maxerr={err:.2e}")
+
+    if args.out:
+        from repro.kernels import interpret_mode
+        blob = {"backend": jax.default_backend(),
+                "interpret": interpret_mode(),
+                "rows": rows}
+        with open(args.out, "w") as f:
+            json.dump(blob, f, indent=2)
+        print(f"wrote {len(rows)} rows to {args.out}")
 
 
 if __name__ == "__main__":

@@ -58,12 +58,13 @@ def _kmeanspp_init(key, x: jnp.ndarray, k: int) -> jnp.ndarray:
     return centers
 
 
-@partial(jax.jit, static_argnames=("num_clusters", "num_iters", "use_kernel",
-                                   "restarts"))
-def kmeans(key, x: jnp.ndarray, num_clusters: int, num_iters: int = 25,
-           use_kernel: bool = False, restarts: int = 4
-           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Multi-restart Lloyd; returns the lowest-inertia (assignments, centers)."""
+def _normalized_search(key, x: jnp.ndarray, num_clusters: int,
+                       num_iters: int, restarts: int
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The search core shared by :func:`kmeans` and the batched fold:
+    cosine-normalize rows + multi-restart Lloyd → (xn, lowest-inertia
+    centers). The final full-size assignment is the caller's — that's the
+    kernel-servable hot-spot, single-entry or batched-grid alike."""
     x = x.astype(jnp.float32)
     # Normalize rows: the cluster signal is the gradient *direction* (the
     # magnitude mostly encodes confidence), cosine k-means is markedly more
@@ -75,9 +76,8 @@ def kmeans(key, x: jnp.ndarray, num_clusters: int, num_iters: int = 25,
         centers = _kmeanspp_init(k, xn, num_clusters)
 
         def step(_, centers):
-            # jnp path inside the vmapped restarts (pallas_call under vmap is
-            # not supported in interpret mode); the kernel serves the final
-            # full-size assignment below
+            # jnp path inside the vmapped restarts; only the final
+            # full-size assignment is worth a kernel launch
             assign = assign_clusters(xn, centers, use_kernel=False)
             onehot = jax.nn.one_hot(assign, num_clusters, dtype=xn.dtype)  # (N, C)
             sums = onehot.T @ xn                                           # (C, d)
@@ -94,8 +94,16 @@ def kmeans(key, x: jnp.ndarray, num_clusters: int, num_iters: int = 25,
         return centers, inertia
 
     all_centers, inertias = jax.vmap(one_run)(jax.random.split(key, restarts))
-    best = jnp.argmin(inertias)
-    centers = all_centers[best]
+    return xn, all_centers[jnp.argmin(inertias)]
+
+
+@partial(jax.jit, static_argnames=("num_clusters", "num_iters", "use_kernel",
+                                   "restarts"))
+def kmeans(key, x: jnp.ndarray, num_clusters: int, num_iters: int = 25,
+           use_kernel: bool = False, restarts: int = 4
+           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Multi-restart Lloyd; returns the lowest-inertia (assignments, centers)."""
+    xn, centers = _normalized_search(key, x, num_clusters, num_iters, restarts)
     return assign_clusters(xn, centers, use_kernel=use_kernel), centers
 
 
@@ -114,6 +122,35 @@ def gradient_pseudo_labels(key, partial_grads: jnp.ndarray, num_classes: int,
     labels, _ = kmeans(key, partial_grads, num_classes, num_iters, use_kernel,
                        restarts=restarts)
     return labels
+
+
+def gradient_pseudo_labels_batched(keys: jnp.ndarray,
+                                   partial_grads: jnp.ndarray,
+                                   num_classes: int, num_iters: int = 25,
+                                   use_kernel: bool = False,
+                                   restarts: int = 4) -> jnp.ndarray:
+    """Step ③ for a stacked batch: keys (B, 2), partial_grads (B, N, d) →
+    (B, N) pseudo labels.
+
+    The batch axis is the engine's anonymous stacked fold axis (S seeds ×
+    C scenarios × K parties upstream). The jnp route vmaps the single-entry
+    program verbatim — bit-identical per entry to the per-call path. The
+    kernel route vmaps only the center *search* and serves every entry's
+    final full-size assignment with ONE batched ``(B, N/BN)`` Pallas grid
+    (``repro.kernels.kmeans.ops.kmeans_assign_batched``) — no per-entry
+    launch loop, no vmap-of-pallas_call. Callers wanting the session-cached
+    compiled fold should go through ``repro.engine.pseudo_labels_batched``.
+    """
+    if not use_kernel:
+        return jax.vmap(
+            lambda k, g: gradient_pseudo_labels(
+                k, g, num_classes, num_iters, use_kernel=False,
+                restarts=restarts))(keys, partial_grads)
+    xn, centers = jax.vmap(
+        lambda k, g: _normalized_search(k, g, num_classes, num_iters,
+                                        restarts))(keys, partial_grads)
+    from repro.kernels.kmeans import ops as kops
+    return kops.kmeans_assign_batched(xn, centers)
 
 
 def cluster_purity(pseudo: jnp.ndarray, true: jnp.ndarray, num_classes: int) -> float:

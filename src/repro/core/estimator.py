@@ -29,6 +29,23 @@ def sdpa_transform(h_u_a: jnp.ndarray, h_o_a: jnp.ndarray, h_o_b: jnp.ndarray,
     return jax.nn.softmax(scores, axis=-1) @ h_o_b
 
 
+def sdpa_transform_batched(h_u_a: jnp.ndarray, h_o_a: jnp.ndarray,
+                           h_o_b: jnp.ndarray, use_kernel: bool = False
+                           ) -> jnp.ndarray:
+    """Eq. 10 over a stacked leading batch axis (the engine's anonymous
+    fold axis: seeds, or a served partial-party batch).
+
+    Shapes: h_u_a (B, N_u, d_a), h_o_a (B, N_o, d_a), h_o_b (B, N_o, d_b).
+    The kernel route is ONE batched ``(B, N_u/BU, N_o/BO)`` Pallas grid
+    launch; the jnp route vmaps the single-entry oracle verbatim."""
+    if use_kernel:
+        from repro.kernels.sdpa_estimator import ops as kops
+        return kops.sdpa_estimate_batched(h_u_a, h_o_a, h_o_b)
+    return jax.vmap(
+        lambda q, a, b: sdpa_transform(q, a, b, use_kernel=False)
+    )(h_u_a, h_o_a, h_o_b)
+
+
 def estimate_missing_parties(
     h_u_k: jnp.ndarray,
     h_o_all: Sequence[jnp.ndarray],

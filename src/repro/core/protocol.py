@@ -33,12 +33,11 @@ import jax
 import jax.numpy as jnp
 
 from repro import engine
-from repro.core import clustering, estimator
+from repro.core import clustering
 from repro.core.client import VFLClient, make_client, ssl_task_for
 from repro.core.comm import CommLedger, nbytes
 from repro.core.metrics import accuracy, binary_auc
-from repro.core.server import (VFLServer, concat_reps,
-                               fit_aux_classifiers_seeds,
+from repro.core.server import (VFLServer, fit_aux_classifiers_seeds,
                                train_classifier_seeds)
 from repro.core.ssl import SSLConfig
 from repro.data.vertical import VerticalSplit
@@ -253,11 +252,19 @@ def _one_shot_seeds(
         flat_kmeans_keys.extend(jax.random.fold_in(kk, c.index)
                                 for c in clients_all[s])
         flat_grads.extend(grads_all[s])
+    km_info: dict = {}
     flat_pseudo = engine.pseudo_labels_seeds(
         flat_kmeans_keys, flat_grads, splits[0].num_classes,
-        cfg.kmeans_iters, use_kernels=cfg.use_kernels, mesh=mesh)
+        cfg.kmeans_iters, use_kernels=cfg.use_kernels, mesh=mesh,
+        info=km_info)
     pseudo_all = engine.unflatten_seed_results(flat_pseudo, num_seeds,
                                                num_parties)
+    for s in range(num_seeds):
+        # the k-means fold width actually run (S·K on the folded path, 1 on
+        # the ragged-shape fallback) — kernel and jnp routes alike
+        diags[s]["kernel_fold"] = km_info.get("fold", 1)
+        if "fallback" in km_info:
+            diags[s]["kernel_fallback"] = km_info["fallback"]
     tasks_per_seed = []
     for s in range(num_seeds):
         tasks = []
@@ -384,10 +391,11 @@ def _few_shot_seeds(
     ledger: Optional[CommLedger] = None,
 ) -> List[VFLResult]:
     """Alg. 2 over S seeds at once, continuing from the seed-batched
-    one-shot pass: the aux-classifier fits, the masked phase-⑤' SSL
-    sessions, and the final classifier re-fit all execute seed-batched;
-    the SDPA estimation and Eq. 8-9 gating are cheap host-side per-seed
-    passes with the exact single-seed key discipline."""
+    one-shot pass: the aux-classifier fits, the ③' SDPA estimation +
+    Eq. 8-9 gating (``engine.fewshot_probs_seeds`` — one batched program
+    per party over the stacked seed axis, DESIGN.md §15), the masked
+    phase-⑤' SSL sessions, and the final classifier re-fit all execute
+    seed-batched with the exact single-seed key discipline."""
     cfg = cfg if cfg is not None else ProtocolConfig()
     ledger = ledger if ledger is not None else CommLedger()
     num_seeds = len(keys)
@@ -430,31 +438,28 @@ def _few_shot_seeds(
                               batch_size=cfg.batch_size,
                               learning_rate=cfg.server_lr, mesh=mesh)
 
-    # ③' SDPA estimation + Eq. 8-9 gating;  ④' download p̂
+    # ③' SDPA estimation + Eq. 8-9 gating;  ④' download p̂ — seed-batched
+    # (DESIGN.md §15): per party, the S estimations + gates fold over the
+    # stacked seed axis (one batched SDPA program per missing party — ONE
+    # Pallas grid launch under cfg.use_kernels — and one vmapped gate
+    # session); the single-seed path is the width-1 case of the same code
+    # under the same session-cache keys.
     probs_all = [[] for _ in range(num_seeds)]
     for s in range(num_seeds):
         diags[s]["fewshot_gate_rate"] = []
+        diags[s]["sdpa_fold"] = num_seeds
+    h_o_stacks = [jnp.stack([h_o_all[s][j] for s in range(num_seeds)])
+                  for j in range(num_parties)]
     r4 = ledger.next_round()
     for k_idx in range(num_parties):
+        h_u_stack = jnp.stack([h_u_all[s][k_idx] for s in range(num_seeds)])
+        probs_stack = engine.fewshot_probs_seeds(
+            servers, k_idx, h_u_stack, h_o_stacks, cfg.fewshot_threshold,
+            use_kernels=cfg.use_kernels, mesh=mesh)
         for s in range(num_seeds):
-            h_u = h_u_all[s][k_idx]
-            est = engine.estimate_missing(h_u, h_o_all[s], k_idx,
-                                          use_kernels=cfg.use_kernels)
-            parts = []
-            ei = 0
-            for j in range(num_parties):
-                if j == k_idx:
-                    parts.append(h_u)
-                else:
-                    parts.append(est[ei])
-                    ei += 1
-            full_rep = concat_reps(parts)
-            probs = estimator.infer_prob(servers[s].aux_logits_fn(k_idx),
-                                         servers[s].joint_logits_fn(),
-                                         h_u, full_rep,
-                                         cfg.fewshot_threshold)
-            probs_all[s].append(probs)
-            diags[s]["fewshot_gate_rate"].append(_safe_mean(probs > 0))
+            probs_all[s].append(probs_stack[s])
+            diags[s]["fewshot_gate_rate"].append(
+                _safe_mean(probs_stack[s] > 0))
         _log_seeds(ledger, k_idx, "down", "pseudo_label_probs",
                    [probs_all[s][k_idx] for s in range(num_seeds)], r4)
 

@@ -30,7 +30,8 @@ KINDS = ("train", "serving")
 
 #: execution diagnostics a training row forwards from ``VFLResult``
 DIAGNOSTIC_KEYS = ("iterations", "engine_path", "seed_fold", "scenario_fold",
-                   "device_fold")
+                   "device_fold", "kernel_fold", "kernel_fallback",
+                   "sdpa_fold")
 
 CORE_KEYS = ("kind", "metric_name", "metric", "comm_bytes", "comm_times")
 

@@ -11,8 +11,11 @@ session's client axis is a plain batch axis, so ``engine.batched`` stacks
 S seeds × K parties into one S·K-entry program (DESIGN.md §10).
 
 Kernel dispatch for the protocol's two Pallas hot-spots (k-means assignment,
-SDPA estimation) is funneled through :func:`pseudo_labels` and
-:func:`estimate_missing` behind a single ``use_kernels`` switch.
+SDPA estimation) is funneled through :func:`pseudo_labels` /
+:func:`estimate_missing` and their fold-native batched counterparts
+:func:`pseudo_labels_batched` / :func:`estimate_missing_batched` behind a
+single ``use_kernels`` switch — the batched entries serve a whole stacked
+fold as ONE Pallas grid launch (DESIGN.md §15).
 """
 from repro.engine.local_ssl import (
     PartyParams,
@@ -28,12 +31,19 @@ from repro.engine.local_ssl import (
     train_parties_ssl_vmapped,
     train_party_ssl,
 )
-from repro.engine.dispatch import estimate_missing, pseudo_labels
+from repro.engine.dispatch import (
+    estimate_missing,
+    estimate_missing_batched,
+    estimate_missing_fused,
+    pseudo_labels,
+    pseudo_labels_batched,
+)
 from repro.engine import batched, iterative, parallel, sessions
 from repro.engine.parallel import device_fold, mesh_key, resolve_mesh
 from repro.engine.batched import (
     fedbcd_sessions_seeds,
     fedcvt_sessions_seeds,
+    fewshot_probs_seeds,
     fit_sessions_batched,
     flatten_seed_tasks,
     pseudo_labels_seeds,
@@ -63,14 +73,18 @@ __all__ = [
     "SSLHParams",
     "build_schedule",
     "estimate_missing",
+    "estimate_missing_batched",
+    "estimate_missing_fused",
     "fedbcd_sessions_seeds",
     "fedcvt_sessions_seeds",
+    "fewshot_probs_seeds",
     "fit_sessions_batched",
     "flatten_seed_tasks",
     "make_ssl_optimizer",
     "make_ssl_step_fn",
     "parties_are_homogeneous",
     "pseudo_labels",
+    "pseudo_labels_batched",
     "pseudo_labels_seeds",
     "splitnn_sessions_seeds",
     "stack_carries",

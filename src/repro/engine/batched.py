@@ -12,8 +12,14 @@ sweeps a *compiled* capability instead of a Python loop over seeds:
   fresh session builds over a single-seed run (``jax.jit`` re-specializes
   the one cached session per stacked shape).
 * :func:`pseudo_labels_seeds` — the step-③ gradient k-means over all
-  S·K gradient matrices as one cached ``vmap`` program (bit-identical to
-  the per-call path; pinned in tests/test_seed_batched.py).
+  S·K gradient matrices as one cached program (bit-identical to the
+  per-call path; pinned in tests/test_seed_batched.py). Under
+  ``use_kernels`` the fold HOLDS: every entry's final assignment runs in
+  ONE batched ``(B, N/BN)`` Pallas grid (DESIGN.md §15).
+* :func:`fewshot_probs_seeds` — few-shot ③' for one party over the
+  stacked seed axis: Eq. 10 estimation (one batched SDPA grid per missing
+  party on the kernel route) + the Eq. 8-9 gate as one vmapped cached
+  session (domains ``"sdpa"`` / ``"fewshot_gate"``).
 * :func:`fit_sessions_batched` — the server classifier fits
   (``core.server._fit``'s ``lax.scan`` session) vmapped over a leading
   batch axis: a multi-seed scenario point's K·S aux fits + S joint fits
@@ -40,12 +46,15 @@ new engine code and zero new session-cache keys (the keys carry neither
 batch width nor data shapes, so a C ≥ 2 fold against a warm C = 1 cache
 compiles nothing fresh at the session level).
 
-Heterogeneous shapes (per-party feature dims, ragged gradient dims) and
-the Pallas kernel path (``pallas_call`` does not support interpret-mode
-``vmap``) fall back to per-entry execution — same numerics, no fold.
+Heterogeneous shapes (per-party feature dims, ragged gradient dims) fall
+back to per-entry execution — same numerics, no fold — and the fallback is
+recorded in the caller's diagnostics (``kernel_fold`` 1) plus logged once,
+never silent. The Pallas kernel path is NOT a fallback trigger anymore:
+batch is a native leading grid dimension of both kernels (DESIGN.md §15).
 """
 from __future__ import annotations
 
+import logging
 import os
 from typing import Any, List, Sequence, Tuple
 
@@ -127,41 +136,130 @@ def train_clients_ssl_seeds(keys: Sequence[jax.Array],
     return out_p, out_m, paths
 
 
-# ----------------------------------------------- k-means: vmap over the fold
+# --------------------------------------------- k-means: fold over the batch
+_log = logging.getLogger(__name__)
+_ragged_fallback_logged = False
+
+
+def _note_ragged_fallback(what: str) -> None:
+    """Log the per-entry fallback ONCE per process — a degraded fold should
+    be visible (diagnostics record it per row; this flags the first one)."""
+    global _ragged_fallback_logged
+    if not _ragged_fallback_logged:
+        _ragged_fallback_logged = True
+        _log.warning("%s: ragged entry shapes — per-entry fallback "
+                     "(fold width 1); diagnostics record kernel_fold=1",
+                     what)
+
+
 def pseudo_labels_seeds(keys: Sequence[jax.Array],
                         partial_grads: Sequence[jnp.ndarray],
                         num_classes: int, kmeans_iters: int = 25,
                         use_kernels: bool = False, restarts: int = 4,
-                        mesh=None) -> List[jnp.ndarray]:
+                        mesh=None, info: dict = None) -> List[jnp.ndarray]:
     """Step ③ for a flat (seed-major) batch of gradient matrices: one
-    cached ``vmap`` of the jittable k-means when every entry shares one
-    shape — bit-identical per entry to the per-call path. The Pallas
-    kernel path (``use_kernels``) and ragged gradient shapes run per entry
-    (``pallas_call`` does not vmap in interpret mode)."""
-    from repro.engine.dispatch import pseudo_labels   # deferred: same package
-    if use_kernels or len({g.shape for g in partial_grads}) != 1:
+    cached compiled program when every entry shares one shape —
+    bit-identical per entry to the per-call path. ``use_kernels`` KEEPS the
+    fold (batch is a native grid dimension of the Pallas kmeans kernel —
+    one ``(B, N/BN)`` launch for the whole batch, DESIGN.md §15); only
+    genuinely ragged gradient shapes fall back to per-entry execution,
+    recorded in ``info`` (→ ``diagnostics["kernel_fold"]``) and logged
+    once. ``info``, when given, receives ``{"fold": width}`` plus
+    ``"fallback"`` with the reason on the degraded path."""
+    from repro.engine.dispatch import (pseudo_labels,   # deferred: same package
+                                       pseudo_labels_batched)
+    n = len(partial_grads)
+    if len({g.shape for g in partial_grads}) != 1:
+        if info is not None:
+            info["fold"] = 1
+            info["fallback"] = "ragged gradient shapes"
+        _note_ragged_fallback("pseudo_labels_seeds")
         return [pseudo_labels(k, g, num_classes, kmeans_iters,
-                              use_kernels=use_kernels)
+                              use_kernels=use_kernels, restarts=restarts)
                 for k, g in zip(keys, partial_grads)]
-    from repro.core import clustering                 # deferred: core imports engine
+    mesh = parallel.resolve_mesh(mesh)
+    out = pseudo_labels_batched(
+        jnp.stack(parallel.pad_entries(keys, mesh)),
+        jnp.stack(parallel.pad_entries(partial_grads, mesh)),
+        num_classes, kmeans_iters=kmeans_iters, use_kernels=use_kernels,
+        restarts=restarts, mesh=mesh)
+    if info is not None:
+        info["fold"] = n
+    return [out[i] for i in range(n)]
+
+
+# ------------------------------------------ few-shot ③': the seed-axis fold
+def fewshot_probs_seeds(servers: Sequence[Any], k_idx: int,
+                        h_u_stack: jnp.ndarray,
+                        h_o_stacks: Sequence[jnp.ndarray],
+                        threshold: float, use_kernels: bool = False,
+                        mesh=None) -> jnp.ndarray:
+    """Few-shot ③' for party ``k_idx`` over the stacked seed axis: Eq. 10
+    estimation of every missing party + the Eq. 8-9 ``infer_prob`` gate,
+    folded — no per-(seed, party) Python loop (DESIGN.md §15).
+
+    ``h_u_stack`` (S, N_u, d_k) stacks the party's unaligned reps over
+    seeds; ``h_o_stacks[j]`` (S, N_o, d_j) the per-party overlap reps.
+    ``servers[s]`` supplies seed ``s``'s fitted aux/joint classifiers
+    (asserted semantically equal across the fold, like every seed-batched
+    model stack). Returns the (S, N_u) gating probabilities p̂.
+
+    Two cached sessions serve any S — estimation (domain ``"sdpa"``, via
+    ``dispatch.estimate_missing_batched``: ONE batched Pallas grid per
+    missing party under ``use_kernels``, a vmapped jnp oracle otherwise)
+    and gating (domain ``"fewshot_gate"``, keyed on the classifiers'
+    semantic identity + threshold + mesh). The single-seed path is the
+    width-1 case under the same keys.
+    """
+    from repro.core import estimator          # deferred: core imports engine
+    from repro.engine import dispatch
 
     mesh = parallel.resolve_mesh(mesh)
-    n = len(partial_grads)
+    num_seeds = h_u_stack.shape[0]
+    pad = parallel.pad_width(num_seeds, mesh)
+    h_u_p = parallel.pad_stacked(h_u_stack, pad)
+    h_o_p = [parallel.pad_stacked(h, pad) for h in h_o_stacks]
+    ests = dispatch.estimate_missing_batched(h_u_p, h_o_p, k_idx,
+                                             use_kernels=use_kernels,
+                                             mesh=mesh)
+    parts, ei = [], 0
+    for j in range(len(h_o_stacks)):
+        if j == k_idx:
+            parts.append(h_u_p)
+        else:
+            parts.append(ests[ei])
+            ei += 1
+    full = jnp.concatenate(parts, axis=-1)    # concat_reps on the stacked axis
+
+    aux_model = servers[0].aux_classifiers[k_idx]
+    joint_model = servers[0].classifier
+    amk = sessions.model_key(aux_model)
+    jmk = sessions.model_key(joint_model)
+    for srv in servers[1:]:
+        if (sessions.model_key(srv.aux_classifiers[k_idx]) != amk
+                or sessions.model_key(srv.classifier) != jmk):
+            raise ValueError(
+                "seed-batched few-shot gating requires semantically equal "
+                "aux/joint classifiers across every seed of the fold")
+    aux_stack = stack_carries(parallel.pad_entries(
+        [srv.aux_params[k_idx] for srv in servers], mesh))
+    joint_stack = stack_carries(parallel.pad_entries(
+        [srv.params for srv in servers], mesh))
 
     def build():
-        def one(key, grads):
-            return clustering.gradient_pseudo_labels(
-                key, grads, num_classes, kmeans_iters, use_kernel=False,
-                restarts=restarts)
+        def one(h_u, full_rep, aux_p, joint_p):
+            return estimator.infer_prob(
+                lambda h: aux_model.apply(aux_p, h),
+                lambda h: joint_model.apply(joint_p, h),
+                h_u, full_rep, threshold)
 
         return parallel.shard_jit(jax.vmap(one), mesh, donate_params=False)
 
     fn = sessions.cached_session(
-        "kmeans", ("vmap", num_classes, kmeans_iters, restarts,
-                   parallel.mesh_key(mesh)), build)
-    out = fn(jnp.stack(parallel.pad_entries(keys, mesh)),
-             jnp.stack(parallel.pad_entries(partial_grads, mesh)))
-    return [out[i] for i in range(n)]
+        "fewshot_gate", (amk, jmk, float(threshold),
+                         parallel.mesh_key(mesh)), build)
+    probs = fn(h_u_p, full, aux_stack, joint_stack)
+    return probs[:num_seeds]
 
 
 # ------------------------------------------- iterative baselines: seed fold

@@ -4,6 +4,15 @@ The protocol used to carry two ad-hoc flags (``use_kmeans_kernel``,
 ``use_sdpa_kernel``); every kernel-served phase now routes through this
 module so enabling the Pallas path is one decision (DESIGN.md §5). The
 pure-jnp references remain the numerical oracles either way.
+
+Since the kernel layer went fold-native (DESIGN.md §15), every entry point
+here has a batched counterpart that takes the engine's stacked anonymous
+batch axis (seeds × scenarios × parties upstream) and serves it as ONE
+program — one cached vmapped jnp session or one batched Pallas grid launch,
+selected by the same ``use_kernels`` switch. Session-cache keys (domains
+``"kmeans"`` / ``"sdpa"``) carry the route + semantic hyper-parameters +
+mesh identity, never the batch width, so the width-1 call IS the folded
+call and a warm cache at one width serves every other.
 """
 from __future__ import annotations
 
@@ -13,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import clustering, estimator
+from repro.engine import parallel, sessions
 
 
 def pseudo_labels(key: jax.Array, partial_grads: jnp.ndarray, num_classes: int,
@@ -28,6 +38,36 @@ def pseudo_labels(key: jax.Array, partial_grads: jnp.ndarray, num_classes: int,
         use_kernel=use_kernels, restarts=restarts)
 
 
+def pseudo_labels_batched(keys: jnp.ndarray, partial_grads: jnp.ndarray,
+                          num_classes: int, kmeans_iters: int = 25,
+                          use_kernels: bool = False, restarts: int = 4,
+                          mesh=None) -> jnp.ndarray:
+    """Step ③ for a stacked batch as ONE cached compiled program.
+
+    keys (B, 2) raw PRNG keys, partial_grads (B, N, d) → (B, N) labels.
+    ``use_kernels=True`` folds every entry's final assignment into ONE
+    batched ``(B, N/BN)`` Pallas grid; otherwise the jnp single-entry
+    program vmaps verbatim. A mesh shards the batch axis like any other
+    stacked axis (DESIGN.md §14) — callers pad B to a device-count
+    multiple (``parallel.pad_entries``/``pad_stacked``) and strip results.
+    """
+    mesh = parallel.resolve_mesh(mesh)
+    route = "kernel" if use_kernels else "vmap"
+
+    def build():
+        def fold(ks, gs):
+            return clustering.gradient_pseudo_labels_batched(
+                ks, gs, num_classes, kmeans_iters, use_kernel=use_kernels,
+                restarts=restarts)
+
+        return parallel.shard_jit(fold, mesh, donate_params=False)
+
+    fn = sessions.cached_session(
+        "kmeans", (route, num_classes, kmeans_iters, restarts,
+                   parallel.mesh_key(mesh)), build)
+    return fn(keys, partial_grads)
+
+
 def estimate_missing(h_u_k: jnp.ndarray, h_o_all: Sequence[jnp.ndarray],
                      k: int, use_kernels: bool = False) -> List[jnp.ndarray]:
     """Few-shot step ③': Eq. 10 SDPA estimation of the other parties'
@@ -36,3 +76,60 @@ def estimate_missing(h_u_k: jnp.ndarray, h_o_all: Sequence[jnp.ndarray],
     """
     return estimator.estimate_missing_parties(
         h_u_k, h_o_all, k, use_kernel=use_kernels)
+
+
+def estimate_missing_batched(h_u_stack: jnp.ndarray,
+                             h_o_stacks: Sequence[jnp.ndarray], k: int,
+                             use_kernels: bool = False, mesh=None
+                             ) -> List[jnp.ndarray]:
+    """Few-shot ③' estimation over a stacked seed axis: ONE program per
+    missing party instead of a (seed × party) Python loop.
+
+    h_u_stack (S, N_u, d) — party k's unaligned reps per seed;
+    h_o_stacks[j] (S, N_o, d_j) — party j's overlap reps per seed. Returns
+    the K−1 estimates (S, N_u, d_j) for j ≠ k in party order. The kernel
+    route launches one batched ``(S, N_u/BU, N_o/BO)`` grid per missing
+    party; the jnp route vmaps the Eq. 10 oracle. Both run as ONE cached
+    session (domain ``"sdpa"``) keyed on route + mesh identity only —
+    ``jax.jit`` re-specializes per (S, shapes). Callers pad S for a mesh.
+    """
+    mesh = parallel.resolve_mesh(mesh)
+    route = "kernel" if use_kernels else "vmap"
+
+    def build():
+        def fold(q, a, b):
+            return estimator.sdpa_transform_batched(q, a, b,
+                                                    use_kernel=use_kernels)
+
+        return parallel.shard_jit(fold, mesh, donate_params=False)
+
+    fn = sessions.cached_session("sdpa", (route, parallel.mesh_key(mesh)),
+                                 build)
+    return [fn(h_u_stack, h_o_stacks[k], h_o_j)
+            for j, h_o_j in enumerate(h_o_stacks) if j != k]
+
+
+def estimate_missing_fused(h_u_k: jnp.ndarray,
+                           h_o_all: Sequence[jnp.ndarray], k: int,
+                           use_kernels: bool = False) -> List[jnp.ndarray]:
+    """Serving-path ③': all K−1 missing-party estimates for ONE query batch
+    as a single batched grid launch (batch axis = the missing parties).
+
+    When the kernel route is on and every other party's overlap reps share
+    one shape, h_u/h_o^A broadcast across a (K−1)-wide batch and the K−1
+    value matrices stack — one ``(K−1, N_u/BU, N_o/BO)`` launch replaces
+    K−1 sequential ones. Ragged per-party rep dims (or the jnp route) fall
+    back to :func:`estimate_missing`, whose kernel case is itself the
+    width-1 batched grid.
+    """
+    others = [j for j in range(len(h_o_all)) if j != k]
+    if (use_kernels and len(others) > 1
+            and len({h_o_all[j].shape for j in others}) == 1):
+        from repro.kernels.sdpa_estimator import ops as kops
+        width = len(others)
+        q = jnp.broadcast_to(h_u_k, (width,) + h_u_k.shape)
+        a = jnp.broadcast_to(h_o_all[k], (width,) + h_o_all[k].shape)
+        b = jnp.stack([h_o_all[j] for j in others])
+        out = kops.sdpa_estimate_batched(q, a, b)
+        return [out[i] for i in range(width)]
+    return estimate_missing(h_u_k, h_o_all, k, use_kernels=use_kernels)

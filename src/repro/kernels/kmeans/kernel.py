@@ -6,7 +6,15 @@ class count — ≤ a few hundred — so centers always fit), forms the distance
 tile with one MXU matmul (‖x‖² − 2·x·μᵀ + ‖μ‖²) and reduces the argmin across
 the padded C lanes in VREGs.
 
-VMEM budget per instance (f32): BN·d + C·d + BN·C floats.
+Batch is a NATIVE leading grid dimension (DESIGN.md §15): the batched entry
+runs a ``(B, N/BN)`` grid in which program ``(b, i)`` assigns row-block ``i``
+of batch entry ``b`` against that entry's own center matrix — one launch for
+a whole stacked S·C·K fold instead of B sequential launches or a ``vmap``
+replay of the single-entry program. The single-entry grid is literally the
+``B = 1`` case.
+
+VMEM budget per instance (f32): BN·d + C·d + BN·C floats — the leading batch
+axis contributes nothing per program (its block width is 1).
 With BN=256, d≤4096, C≤1024: 256·4096·4 + 1024·4096·4 + 256·1024·4 ≈ 21.3 MB
 worst case — ops.py clamps BN down when d·C is large so the working set stays
 within the ~16 MB/core VMEM of TPU v5e. MXU alignment: BN multiple of 8,
@@ -22,37 +30,48 @@ from jax.experimental import pallas as pl
 
 
 def _kmeans_assign_kernel(x_ref, c_ref, out_ref):
-    x = x_ref[...].astype(jnp.float32)          # (BN, d)
-    cen = c_ref[...].astype(jnp.float32)        # (C, d)
+    x = x_ref[0].astype(jnp.float32)            # (BN, d)
+    cen = c_ref[0].astype(jnp.float32)          # (C, d)
     x2 = jnp.sum(x * x, axis=1, keepdims=True)                   # (BN, 1)
     c2 = jnp.sum(cen * cen, axis=1)[None, :]                     # (1, C)
     # MXU: (BN, d) @ (d, C)
     dots = jax.lax.dot_general(x, cen, (((1,), (1,)), ((), ())),
                                preferred_element_type=jnp.float32)
     dist = x2 - 2.0 * dots + c2                                  # (BN, C)
-    out_ref[...] = jnp.argmin(dist, axis=1).astype(jnp.int32)
+    out_ref[0, :] = jnp.argmin(dist, axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def kmeans_assign_batched_padded(x: jnp.ndarray, centers: jnp.ndarray,
+                                 block_n: int = 256, interpret: bool = False
+                                 ) -> jnp.ndarray:
+    """x (B, N, d), centers (B, C, d) → (B, N) int32; N % block_n == 0,
+    d/C already padded.
+
+    Padded center rows must be filled with +inf-distance sentinels by ops.py
+    (i.e. rows of large magnitude) so they never win the argmin.
+    """
+    b, n, d = x.shape
+    _, c, _ = centers.shape
+    assert n % block_n == 0, (n, block_n)
+    grid = (b, n // block_n)
+    return pl.pallas_call(
+        _kmeans_assign_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_n, d), lambda bi, i: (bi, i, 0)),
+            pl.BlockSpec((1, c, d), lambda bi, i: (bi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda bi, i: (bi, i)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.int32),
+        interpret=interpret,
+    )(x, centers)
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def kmeans_assign_padded(x: jnp.ndarray, centers: jnp.ndarray,
                          block_n: int = 256, interpret: bool = False) -> jnp.ndarray:
-    """x (N, d), centers (C, d); N % block_n == 0, d/C already padded.
-
-    Padded center rows must be filled with +inf-distance sentinels by ops.py
-    (i.e. rows of large magnitude) so they never win the argmin.
-    """
-    n, d = x.shape
-    c, _ = centers.shape
-    assert n % block_n == 0, (n, block_n)
-    grid = (n // block_n,)
-    return pl.pallas_call(
-        _kmeans_assign_kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
-            pl.BlockSpec((c, d), lambda i: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
-        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
-        interpret=interpret,
-    )(x, centers)
+    """x (N, d), centers (C, d); the width-1 case of the batched grid."""
+    return kmeans_assign_batched_padded(x[None], centers[None],
+                                        block_n=block_n,
+                                        interpret=interpret)[0]

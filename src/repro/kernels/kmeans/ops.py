@@ -1,4 +1,4 @@
-"""Public jit'd wrapper: padding, VMEM-budget block sizing, dtype plumbing.
+"""Public jit'd wrappers: padding, VMEM-budget block sizing, dtype plumbing.
 
 When does this beat the XLA reference?  The jnp oracle materializes the full
 (N, C) distance matrix in HBM before the argmin; the kernel fuses distance
@@ -9,7 +9,25 @@ For tiny N (few hundred rows) the launch overhead makes XLA's fused
 expansion just as fast; that's why ``use_kernels`` defaults to off in
 ``ProtocolConfig`` and tests pin the jnp path as the numerical oracle.
 
-VMEM budget per grid instance (f32), mirroring kmeans/kernel.py:
+The batched entry (``kmeans_assign_batched``) folds a stacked S·C·K axis
+into the grid itself — ONE launch for the whole fold versus B sequential
+width-1 launches or a vmap replay: one dispatch, one pad plan, one trace
+instead of B of each. Measured on the bench shapes (B=8, N=2048, d=128,
+C=10; CPU interpret mode, ``benchmarks/kernels_bench.py`` /
+BENCH_kernels.json): the batched grid is bit-equal to the vmapped jnp
+oracle, but interpret-mode wall-clock does NOT show the win — the
+interpreter's per-grid-step cost dominates, so the B-grid launch times
+about the same as B sequential launches (grid_vs_seq ≈ 0.7×) and the
+XLA reference is ~20× faster outright. That is expected: under
+interpretation Pallas is strictly overhead (the KernelRouter routes it
+off everywhere on CPU). The batched grid's payoff is on TPU, where the
+per-launch dispatch/pad cost it amortizes is real and the distance tile
+never leaves VMEM; the roofline note above governs when to flip
+``use_kernels``.
+
+VMEM budget per grid instance (f32), mirroring kmeans/kernel.py — the
+leading batch axis has block width 1 and adds NOTHING per instance, so
+block sizing is batch-independent:
 
   tile              shape        bytes (BN=256, d=4096, C=1024 worst case)
   x row-tile        (BN, d)      256·4096·4 ≈ 4.2 MB
@@ -25,11 +43,14 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.kernels import interpret_mode
-from repro.kernels.kmeans.kernel import kmeans_assign_padded
+from repro.kernels.kmeans.kernel import (kmeans_assign_batched_padded,
+                                         kmeans_assign_padded)
 
 _LANE = 128     # MXU/VREG lane width
 _SUBLANE = 8
 _VMEM_BUDGET = 12 * 2**20   # leave headroom under ~16 MB/core
+
+assert kmeans_assign_padded is not None  # width-1 entry, re-exported
 
 
 def _round_up(v: int, m: int) -> int:
@@ -44,21 +65,39 @@ def _pick_block_n(d_pad: int, c_pad: int) -> int:
     return 8
 
 
-def kmeans_assign(x: jnp.ndarray, centers: jnp.ndarray) -> jnp.ndarray:
-    """argmin_c ‖x_i − μ_c‖² via the Pallas kernel. Any N, d, C."""
-    n, d = x.shape
-    c = centers.shape[0]
+def _pad_plan(n: int, d: int, c: int):
     d_pad = _round_up(max(d, _LANE), _LANE)
     c_pad = _round_up(max(c, _SUBLANE), _SUBLANE)
     bn = _pick_block_n(d_pad, c_pad)
     n_pad = _round_up(max(n, bn), bn)
+    return n_pad, d_pad, c_pad, bn
 
-    xp = jnp.zeros((n_pad, d_pad), jnp.float32).at[:n, :d].set(x.astype(jnp.float32))
+
+def kmeans_assign_batched(x: jnp.ndarray, centers: jnp.ndarray) -> jnp.ndarray:
+    """argmin_c ‖x_{b,i} − μ_{b,c}‖² per batch entry, ONE (B, N/BN) grid.
+
+    x (B, N, d), centers (B, C, d) → (B, N) int32. Any N, d, C; the batch
+    axis is the stacked fold axis (seeds × scenarios × parties upstream)."""
+    b, n, d = x.shape
+    c = centers.shape[1]
+    n_pad, d_pad, c_pad, bn = _pad_plan(n, d, c)
+
+    xp = jnp.zeros((b, n_pad, d_pad), jnp.float32
+                   ).at[:, :n, :d].set(x.astype(jnp.float32))
     # Sentinel rows: huge coordinates → huge distance → never the argmin.
-    cp = jnp.full((c_pad, d_pad), 0.0, jnp.float32)
-    cp = cp.at[:c, :d].set(centers.astype(jnp.float32))
+    cp = jnp.zeros((b, c_pad, d_pad), jnp.float32
+                   ).at[:, :c, :d].set(centers.astype(jnp.float32))
     if c_pad > c:
-        cp = cp.at[c:, 0].set(3e18)
+        cp = cp.at[:, c:, 0].set(3e18)
 
-    out = kmeans_assign_padded(xp, cp, block_n=bn, interpret=interpret_mode())
-    return out[:n]
+    out = kmeans_assign_batched_padded(xp, cp, block_n=bn,
+                                       interpret=interpret_mode())
+    return out[:, :n]
+
+
+def kmeans_assign(x: jnp.ndarray, centers: jnp.ndarray) -> jnp.ndarray:
+    """argmin_c ‖x_i − μ_c‖² via the Pallas kernel. Any N, d, C.
+
+    The width-1 case of :func:`kmeans_assign_batched` — same padding plan,
+    same grid program."""
+    return kmeans_assign_batched(x[None], centers[None])[0]

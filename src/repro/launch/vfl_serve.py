@@ -46,7 +46,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint.artifact import TrainedVFLModel, load_artifact
-from repro.engine.dispatch import estimate_missing
+from repro.engine.dispatch import estimate_missing_fused
 from repro.engine.sessions import cached_session, model_key
 from repro.kernels import interpret_mode
 from repro.launch import batching
@@ -75,12 +75,15 @@ class KernelRouter:
     def pallas_viable(self) -> bool:
         return not self.interpret and self.backend == "tpu"
 
-    def use_sdpa(self, n_u: int, n_o: int, d: int) -> bool:
+    def use_sdpa(self, n_u: int, n_o: int, d: int, batch: int = 1) -> bool:
         """Eq. 10 estimation: the flash-style blocked kernel wins when the
-        (N_u, N_o) score matrix no longer fits VMEM-resident tiles — i.e.
-        when materializing softmax(H_u H_oᵀ) costs an extra HBM round-trip
-        (kernels/sdpa_estimator). Below that XLA fuses the chain fine."""
-        return self.pallas_viable and n_u * n_o * 4 >= 4 << 20
+        score matrices no longer fit VMEM-resident tiles — i.e. when
+        materializing softmax(H_u H_oᵀ) costs an extra HBM round-trip
+        (kernels/sdpa_estimator). Below that XLA fuses the chain fine.
+        ``batch`` is the batched-grid width (a served partial-party query
+        runs all K−1 estimates as ONE ``(K−1, …)`` grid launch, so the
+        roofline sees the whole B·N_u·N_o score volume, not one slice)."""
+        return self.pallas_viable and batch * n_u * n_o * 4 >= 4 << 20
 
     def use_rmsnorm(self, rows: int, d: int) -> bool:
         """Fused RMSNorm wins on large activations (rows·d ≳ a few MB)
@@ -205,9 +208,12 @@ class ServingEngine:
         h_u_k = ext.apply(art.client_params[k].extractor, x_k)
         n_o = int(art.overlap_reps[0].shape[0])
         use_kernels = self.router.use_sdpa(int(h_u_k.shape[0]), n_o,
-                                           int(h_u_k.shape[-1]))
-        estimates = estimate_missing(h_u_k, art.overlap_reps, k,
-                                     use_kernels=use_kernels)
+                                           int(h_u_k.shape[-1]),
+                                           batch=art.num_parties - 1)
+        # all K−1 missing-party estimates as ONE batched grid launch when
+        # the other parties' rep dims agree (DESIGN.md §15)
+        estimates = estimate_missing_fused(h_u_k, art.overlap_reps, k,
+                                           use_kernels=use_kernels)
         est = iter(estimates)
         reps = [h_u_k if j == k else next(est)
                 for j in range(art.num_parties)]

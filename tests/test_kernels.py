@@ -8,6 +8,10 @@ from repro.kernels.decode_attention import ops as dec_ops, ref as dec_ref
 from repro.kernels.kmeans import ops as km_ops, ref as km_ref
 from repro.kernels.sdpa_estimator import ops as sdpa_ops, ref as sdpa_ref
 
+requires_tpu = pytest.mark.skipif(
+    jax.default_backend() != "tpu",
+    reason="compiled (non-interpret) Pallas grids need a TPU backend")
+
 
 # ----------------------------------------------------------------- kmeans --
 @pytest.mark.parametrize("n,d,c", [
@@ -67,6 +71,107 @@ def test_sdpa_large_asymmetric():
     want = sdpa_ref.sdpa_estimate(hu, hoa, hob)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                atol=2e-5, rtol=2e-5)
+
+
+# ----------------------------------------- batched grids (DESIGN.md §15) --
+def _km_batch(b, n, d, c, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed + b + n))
+    return (jax.random.normal(k1, (b, n, d)),
+            jax.random.normal(k2, (b, c, d)))
+
+
+def _sdpa_batch(b, nu, no, d, db, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed + b + nu), 3)
+    return (jax.random.normal(ks[0], (b, nu, d)),
+            jax.random.normal(ks[1], (b, no, d)),
+            jax.random.normal(ks[2], (b, no, db)))
+
+
+@pytest.mark.parametrize("b,n,d,c", [
+    (1, 100, 32, 10), (5, 300, 17, 10), (3, 257, 130, 7), (2, 8, 1, 2),
+])
+def test_kmeans_batched_grid_matches_vmapped_ref(b, n, d, c):
+    """One (B, N/BN) grid launch ≡ jax.vmap of the jnp oracle, bit-equal."""
+    x, cen = _km_batch(b, n, d, c)
+    got = km_ops.kmeans_assign_batched(x, cen)
+    want = jax.vmap(km_ref.kmeans_assign)(x, cen)
+    assert got.shape == (b, n)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("b,n,d,c", [(4, 200, 24, 6)])
+def test_kmeans_batched_grid_matches_per_call_kernel(b, n, d, c):
+    """Batched grid ≡ B width-1 kernel launches (the fold changes the grid,
+    never the program each instance runs)."""
+    x, cen = _km_batch(b, n, d, c, seed=7)
+    got = km_ops.kmeans_assign_batched(x, cen)
+    per = np.stack([np.asarray(km_ops.kmeans_assign(x[i], cen[i]))
+                    for i in range(b)])
+    assert np.array_equal(np.asarray(got), per)
+
+
+def test_kmeans_width1_is_batched_grid():
+    """The single-entry public op IS the width-1 batched grid."""
+    x, cen = _km_batch(1, 150, 20, 5, seed=3)
+    a = km_ops.kmeans_assign(x[0], cen[0])
+    b_ = km_ops.kmeans_assign_batched(x, cen)[0]
+    assert np.array_equal(np.asarray(a), np.asarray(b_))
+
+
+@pytest.mark.parametrize("b,nu,no,d,db", [
+    (1, 100, 50, 32, 48), (4, 333, 70, 19, 23), (2, 513, 200, 128, 128),
+    (3, 7, 3, 5, 9),
+])
+def test_sdpa_batched_grid_matches_vmapped_ref(b, nu, no, d, db):
+    """One (B, N_u/BU, N_o/BO) grid launch ≡ jax.vmap of the jnp oracle."""
+    hu, hoa, hob = _sdpa_batch(b, nu, no, d, db)
+    got = sdpa_ops.sdpa_estimate_batched(hu, hoa, hob)
+    want = jax.vmap(sdpa_ref.sdpa_estimate)(hu, hoa, hob)
+    assert got.shape == (b, nu, db)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_sdpa_batched_grid_matches_per_call_kernel():
+    """Batched grid ≡ B width-1 kernel launches, bit-equal (identical
+    per-instance program, identical padding plan)."""
+    b, nu, no, d, db = 3, 120, 40, 16, 24
+    hu, hoa, hob = _sdpa_batch(b, nu, no, d, db, seed=11)
+    got = np.asarray(sdpa_ops.sdpa_estimate_batched(hu, hoa, hob))
+    per = np.stack([np.asarray(sdpa_ops.sdpa_estimate(hu[i], hoa[i], hob[i]))
+                    for i in range(b)])
+    assert np.array_equal(got, per)
+
+
+def test_batched_grids_vmap_directly():
+    """jax.vmap over the batched public entries composes (the stacked-axis
+    contract the engine's mesh sharding relies on): vmapping the width-1
+    call must agree with the native batched grid."""
+    x, cen = _km_batch(3, 64, 12, 4, seed=5)
+    native = km_ops.kmeans_assign_batched(x, cen)
+    vmapped = jax.vmap(km_ops.kmeans_assign)(x, cen)
+    assert np.array_equal(np.asarray(native), np.asarray(vmapped))
+
+
+@requires_tpu
+def test_kmeans_batched_grid_compiled_mode(monkeypatch):
+    """The same parity with interpret forced OFF — the Mosaic-compiled
+    grid, not the interpreter (TPU only)."""
+    monkeypatch.setattr(km_ops, "interpret_mode", lambda: False)
+    x, cen = _km_batch(4, 300, 64, 10)
+    got = km_ops.kmeans_assign_batched(x, cen)
+    want = jax.vmap(km_ref.kmeans_assign)(x, cen)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@requires_tpu
+def test_sdpa_batched_grid_compiled_mode(monkeypatch):
+    monkeypatch.setattr(sdpa_ops, "interpret_mode", lambda: False)
+    hu, hoa, hob = _sdpa_batch(4, 512, 128, 64, 64)
+    got = sdpa_ops.sdpa_estimate_batched(hu, hoa, hob)
+    want = jax.vmap(sdpa_ref.sdpa_estimate)(hu, hoa, hob)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
 
 
 # ------------------------------------------------------------ decode attn --

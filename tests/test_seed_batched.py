@@ -253,6 +253,97 @@ def test_pseudo_labels_seeds_bit_identical_to_per_call():
         assert bool(jnp.all(f == eager))
 
 
+# --------------------------------------- kernel-route folds (DESIGN.md §15)
+def test_pseudo_labels_seeds_use_kernels_keeps_the_fold():
+    """The retired fallback: seeds >= 2 under ``use_kernels=True`` must run
+    the ONE batched Pallas grid — ``info["fold"]`` records the full stacked
+    width, no fallback reason — and match the per-call kernel path
+    bit-exactly."""
+    grads = jax.random.normal(jax.random.PRNGKey(0), (6, 32, 16))
+    keys = list(jax.random.split(jax.random.PRNGKey(7), 6))
+    info = {}
+    folded = engine.pseudo_labels_seeds(keys, list(grads), num_classes=2,
+                                        kmeans_iters=25, use_kernels=True,
+                                        info=info)
+    assert info["fold"] == 6
+    assert "fallback" not in info
+    for k, g, f in zip(keys, grads, folded):
+        eager = engine.pseudo_labels(k, g, 2, 25, use_kernels=True)
+        assert bool(jnp.all(f == eager))
+        # and the kernel route assigns exactly the jnp route's labels
+        assert bool(jnp.all(f == engine.pseudo_labels(k, g, 2, 25)))
+
+
+def test_pseudo_labels_seeds_ragged_fallback_is_recorded():
+    """Only ragged gradient stacks may take the per-entry loop now — and
+    the reason lands in ``info`` (→ ``kernel_fallback`` on result rows)."""
+    keys = list(jax.random.split(jax.random.PRNGKey(3), 2))
+    grads = [jax.random.normal(jax.random.PRNGKey(0), (32, 16)),
+             jax.random.normal(jax.random.PRNGKey(1), (40, 16))]
+    info = {}
+    folded = engine.pseudo_labels_seeds(keys, grads, num_classes=2,
+                                        use_kernels=True, info=info)
+    assert info["fold"] == 1
+    assert "ragged" in info["fallback"]
+    for k, g, f in zip(keys, grads, folded):
+        assert bool(jnp.all(f == engine.pseudo_labels(k, g, 2,
+                                                      use_kernels=True)))
+
+
+def test_run_seeds_use_kernels_one_shot_parity_and_fold(splits):
+    """One-shot under the kernel route: per-seed metric == the jnp route's
+    (the kernel assignment is bit-equal to the oracle), and every result
+    records kernel_fold == S·K with no fallback."""
+    cfg = dataclasses.replace(_FAST, use_kernels=True)
+    kernel = _run_seeds(run_one_shot, splits, cfg)
+    plain = _run_seeds(run_one_shot, splits)
+    for rk, rj in zip(kernel, plain):
+        assert abs(float(rk.metric) - float(rj.metric)) < 1e-5
+        assert rk.diagnostics["kernel_fold"] == len(SEEDS) * 2   # S=2 × K=2
+        assert "kernel_fallback" not in rk.diagnostics
+
+
+def test_run_seeds_use_kernels_few_shot_matches_solo_kernel_route(splits):
+    """Few-shot under ``use_kernels=True``: the seed fold == the solo run
+    on the SAME route at 1e-5 (take rates exactly equal), with the fold
+    diagnostics pinning the stacked widths — kernel_fold S·K on the folded
+    rows vs 1·K solo, sdpa_fold S vs 1."""
+    cfg = dataclasses.replace(_FAST, use_kernels=True)
+    batched = _run_seeds(run_few_shot, splits, cfg)
+    for s, split in zip(SEEDS, splits):
+        solo = run_few_shot(jax.random.PRNGKey(s), split, _ext(), _SSL, cfg)
+        res = batched[SEEDS.index(s)]
+        assert abs(float(res.metric) - float(solo.metric)) < 1e-5, \
+            (s, float(res.metric), float(solo.metric))
+        assert res.diagnostics["fewshot_take_rate"] == \
+            solo.diagnostics["fewshot_take_rate"]
+        _assert_ledgers_equal(res.ledger, solo.ledger)
+        assert res.diagnostics["kernel_fold"] == len(SEEDS) * 2
+        assert solo.diagnostics["kernel_fold"] == 2               # 1 seed × K
+        assert res.diagnostics["sdpa_fold"] == len(SEEDS)
+        assert solo.diagnostics["sdpa_fold"] == 1
+        assert "kernel_fallback" not in res.diagnostics
+
+
+def test_use_kernels_seed_batch_adds_zero_fresh_compiles(splits):
+    """The cache discipline holds on the kernel route too: seeds >= 2 add
+    ZERO fresh session builds over a 1-seed kernel-route run (the kmeans/
+    sdpa/fewshot_gate keys carry the route, never the width)."""
+    cfg = dataclasses.replace(_FAST, use_kernels=True)
+    engine.clear_session_cache()
+    run_seeds(run_few_shot, [jax.random.PRNGKey(0)], splits[:1], [_ext()],
+              [_SSL], cfg)
+    one_seed = {d: st["misses"]
+                for d, st in engine.session_cache_stats_by_domain().items()}
+    engine.clear_session_cache()
+    _run_seeds(run_few_shot, splits, cfg)
+    two_seeds = {d: st["misses"]
+                 for d, st in engine.session_cache_stats_by_domain().items()}
+    assert two_seeds == one_seed, (one_seed, two_seeds)
+    for domain in ("kmeans", "sdpa", "fewshot_gate"):
+        assert two_seeds.get(domain, 0) >= 1, (domain, two_seeds)
+
+
 # ------------------------------------------------- satellite regressions
 def test_build_schedule_epoch0_streams_decorrelated():
     """Epoch 0's labeled shuffle and unlabeled draws historically seeded

@@ -220,6 +220,12 @@ def test_kernel_router_roofline_rules():
     tpu = KernelRouter(backend="tpu", interpret=False)
     assert tpu.use_sdpa(1 << 12, 1 << 10, 64)          # 16 MB score matrix
     assert not tpu.use_sdpa(64, 32, 64)                # XLA fuses small
+    # the batched-grid width scales the roofline: one slice of a K−1-wide
+    # partial-party launch sits under the crossover, the whole launch is
+    # the real score volume and clears it
+    assert not tpu.use_sdpa(1 << 10, 1 << 9, 64)             # 2 MB slice
+    assert tpu.use_sdpa(1 << 10, 1 << 9, 64, batch=3)        # 6 MB launch
+    assert not cpu.use_sdpa(1 << 10, 1 << 9, 64, batch=64)   # interpret: never
     assert tpu.use_rmsnorm(2048, 4096)                 # ops.py's own example
     assert not tpu.use_rmsnorm(8, 128)
     assert tpu.use_decode_attention(8192)
