@@ -37,7 +37,11 @@ session per input shape, so this counts trace-level program builds, not
 individual XLA compilations). The blob-level ``session_cache`` field
 carries the per-domain hit/miss totals and ``groups`` the partition.
 
-CI wiring (.github/workflows/ci.yml, job ``bench-smoke``)::
+CI wiring (.github/workflows/ci.yml, job ``bench-frontier`` — one of five
+parallel bench legs; ``bench-kernels`` / ``bench-sharded`` /
+``bench-faults`` re-run this module on focused ``--scenarios`` slices
+with ``--use-kernels`` / ``--devices 2`` / the fault/* family, and
+``bench-serving`` runs ``benchmarks.serving``)::
 
     REPRO_ENGINE_MODE=vmap python -m benchmarks.frontier \
         --smoke --seeds 2 --check-gate
@@ -81,6 +85,16 @@ S·C·K axis over an N-device launch mesh (forcing N host devices first on
 CPU-only machines); rows record ``device_fold`` and the blob the mesh,
 and ``--check-gate`` then also requires every folded row to have actually
 sharded (``device_fold == N``).
+
+Fault-injected scenarios (DESIGN.md §16) sweep like any others — the
+catalog's fault/* members attach a ``FaultSpec`` and the group runner
+forwards the C×S fault grid to ``run_scenarios_seeds`` — and the gate
+adds the graceful-degradation floors of :func:`_check_fault_rows`: a
+gated FULL sweep must contain fault rows at all, dropout rows must lose
+exactly one party (with ledger-visible retry cost on the iterative
+methods), and each faulted scenario's one-shot mean may trail its
+fault-free twin by at most ``max_oneshot_drop`` (``fault_families`` in
+``frontier_baseline.json``).
 """
 from __future__ import annotations
 
@@ -188,6 +202,13 @@ def run_scenario_group(bundles_per_scenario, seeds, methods=METHODS,
     b0 = bundles_per_scenario[0][0]
     vmap_eligible = engine.parties_are_homogeneous(
         b0.extractors, b0.ssl_cfgs, [x.shape for x in b0.split.aligned])
+    # a group carrying any FaultSpec threads the C×S fault grid through the
+    # SAME folded sweep (DESIGN.md §16): faults are per-entry data, excluded
+    # from the fold signature, so fault/* members and their fault-free twin
+    # stack into one program
+    fault_kw = {}
+    if any(spec.fault is not None for spec in specs):
+        fault_kw["faults"] = [[spec.fault for _ in seeds] for spec in specs]
     rows = []
     for method in methods:
         runner, cfg = runner_cfgs[method]
@@ -199,7 +220,7 @@ def run_scenario_group(bundles_per_scenario, seeds, methods=METHODS,
             [[b.split for b in bs] for bs in bundles_per_scenario],
             [[b.extractors for b in bs] for bs in bundles_per_scenario],
             [[b.ssl_cfgs for b in bs] for bs in bundles_per_scenario],
-            cfg)
+            cfg, **fault_kw)
         wall = time.time() - t0
         misses = session_cache_stats()["misses"] - misses0
         for spec, scen_results in zip(specs, results):
@@ -275,8 +296,107 @@ def _check_margins(name: str, method_rows: dict, its: dict, label: str,
         )
 
 
+def _check_fault_rows(per_seed, baseline, expect_faults: bool,
+                      problems: list) -> None:
+    """Graceful-degradation gate over the fault/* rows (DESIGN.md §16).
+
+    Per ``fault_families`` entry in the baseline file: the whole family
+    must be present (``required``); dropout rows must record one party
+    lost (``parties_survived == K-1``) and — on the iterative methods —
+    ledger-visible retry/timeout cost; every protocol fault row must carry
+    ``degraded_metric``; and the one-shot MEAN metric of each faulted
+    scenario may fall at most ``max_oneshot_drop`` below its fault-free
+    twin's (``baseline_scenario``). A gated full sweep with ZERO fault
+    rows is itself a violation (``expect_faults``) — degradation coverage
+    must not silently vanish from CI, mirroring the missing-few-shot rule.
+    """
+    fams = baseline.get("fault_families", {})
+    fault_rows = [r for r in per_seed if "fault_kind" in r]
+    if not fault_rows:
+        if expect_faults:
+            problems.append(
+                "no fault-injected rows in a gated sweep — the "
+                "graceful-degradation gate cannot be evaluated (sweep the "
+                "full catalog, or pass --scenarios explicitly for partial "
+                "sweeps)"
+            )
+        return
+    for fam, fspec in fams.items():
+        rows_f = [r for r in fault_rows
+                  if r["scenario"].startswith(fam + "/")]
+        if not rows_f:
+            continue
+        present = {r["scenario"] for r in rows_f}
+        missing = sorted(set(fspec.get("required", ())) - present)
+        if missing:
+            problems.append(
+                f"fault family {fam!r}: scenarios {missing} missing from "
+                f"the sweep — the degradation claim needs the whole family"
+            )
+        for r in rows_f:
+            num_parties = r.get("num_parties")
+            survived = r.get("parties_survived")
+            if r.get("fault_kind") == "dropout":
+                if survived != num_parties - 1:
+                    problems.append(
+                        f"{r['scenario']} seed {r['seed']}: {r['method']} "
+                        f"dropout row records parties_survived={survived} "
+                        f"(expected {num_parties - 1} of {num_parties})"
+                    )
+                if r["method"] in ("iterative", "fedcvt") \
+                        and (r.get("fault_retry_rounds", 0) < 1
+                             or r.get("fault_retry_bytes", 0) < 1):
+                    problems.append(
+                        f"{r['scenario']} seed {r['seed']}: {r['method']} "
+                        f"dropout row shows no retry/timeout cost in the "
+                        f"ledger (fault_retry_rounds="
+                        f"{r.get('fault_retry_rounds')}, fault_retry_bytes="
+                        f"{r.get('fault_retry_bytes')})"
+                    )
+            elif survived != num_parties:
+                problems.append(
+                    f"{r['scenario']} seed {r['seed']}: {r['method']} "
+                    f"{r.get('fault_kind')} row records "
+                    f"parties_survived={survived} (expected {num_parties})"
+                )
+            if r["method"] in ("one_shot", "few_shot") \
+                    and r.get("degraded_metric") is None:
+                problems.append(
+                    f"{r['scenario']} seed {r['seed']}: {r['method']} fault "
+                    f"row carries no degraded_metric"
+                )
+        base_name = fspec.get("baseline_scenario")
+        max_drop = fspec.get("max_oneshot_drop")
+        if base_name is None or max_drop is None:
+            continue
+        base_ones = [r["metric"] for r in per_seed
+                     if r["scenario"] == base_name
+                     and r["method"] == "one_shot"]
+        if not base_ones:
+            problems.append(
+                f"fault family {fam!r}: fault-free twin {base_name!r} has "
+                f"no one_shot rows to measure degradation against"
+            )
+            continue
+        base_mean = sum(base_ones) / len(base_ones)
+        for name in sorted(present - {base_name}):
+            vals = [r["metric"] for r in fault_rows
+                    if r["scenario"] == name and r["method"] == "one_shot"]
+            if not vals:
+                continue
+            mean = sum(vals) / len(vals)
+            if mean < base_mean - max_drop:
+                problems.append(
+                    f"{name}: one-shot degraded mean metric {mean:.4f} "
+                    f"fell more than {max_drop:.3f} below the fault-free "
+                    f"twin {base_name} ({base_mean:.4f}) — graceful "
+                    f"degradation broke"
+                )
+
+
 def check_gate(rows, baseline_path: str = BASELINE_PATH,
-               devices=None, use_kernels: bool = False) -> list:
+               devices=None, use_kernels: bool = False,
+               expect_faults: bool = False) -> list:
     """The CI regression gate. Returns a list of violation strings.
 
     Point estimates upgraded to seed statistics: the one-shot-vs-iterative
@@ -296,6 +416,10 @@ def check_gate(rows, baseline_path: str = BASELINE_PATH,
     step-③ k-means fold over the whole flat S·C·K batch — no per-entry
     fallback) and every few-shot row ``sdpa_fold == seed_fold ·
     scenario_fold`` (③' folded over the stacked seed axis).
+
+    ``expect_faults`` (set by full gated sweeps) additionally runs the
+    graceful-degradation gate over the fault/* rows — and treats a sweep
+    with ZERO fault rows as a violation (:func:`_check_fault_rows`).
     """
     problems = []
     per_seed = [r for r in rows if not r.get("aggregate")]
@@ -303,6 +427,8 @@ def check_gate(rows, baseline_path: str = BASELINE_PATH,
 
     with open(baseline_path) as fh:
         baseline = json.load(fh)
+
+    _check_fault_rows(per_seed, baseline, expect_faults, problems)
 
     if use_kernels:
         for r in per_seed:
@@ -550,15 +676,19 @@ def main(argv=None) -> int:
     print(f"wrote {args.out}: {len(rows)} rows in {blob['wall_s']:.0f}s")
 
     if args.check_gate:
+        # an explicit --scenarios list is a partial sweep by construction;
+        # tag/smoke selections must carry the fault family (DESIGN.md §16)
         problems = check_gate(rows, args.baseline, devices=args.devices,
-                              use_kernels=args.use_kernels)
+                              use_kernels=args.use_kernels,
+                              expect_faults=args.scenarios is None)
         if problems:
             for p in problems:
                 print(f"GATE VIOLATION: {p}", file=sys.stderr)
             return 1
         print("gate: one-shot AND few-shot dominate iterative (bytes >=100x, "
-              "mean margin + worst seed), engine paths as forced, and bytes "
-              "match the recorded baseline")
+              "mean margin + worst seed), engine paths as forced, fault/* "
+              "degradation within bounds, and bytes match the recorded "
+              "baseline")
     return 0
 
 

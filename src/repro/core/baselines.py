@@ -111,6 +111,66 @@ def _log_iterative_rounds(ledger: CommLedger, clients: Sequence[VFLClient],
             ledger.log_bytes(c.index, "down", "grads_batch", num, round=r_dn)
 
 
+def _iterative_fault_plan(faults, clients, n_steps: int, bs: int,
+                          payload_factor: int = 1):
+    """Per-entry ledgers + dropout modeling for an iterative baseline fold
+    (DESIGN.md §16). The synchronous round loop has no estimator to
+    recover a dropped party, so the session stalls at the drop step:
+    normal per-iteration accounting runs to ``t_drop``, then the server
+    burns ``retry_rounds`` extra communication rounds — every surviving
+    client re-uploads its batch while the dropped party gets a 4-byte
+    timeout probe — before the method gives up with the carry it has.
+    Straggler / dp_upload / representation_only faults have no analogue
+    in the round loop: those entries run fault-free and are marked
+    ``fault_modeled: False``.
+
+    Returns ``(ledgers, active_steps | None, per_entry_diags)``;
+    ``active_steps`` is the (S,) per-entry commit horizon the engine's
+    faulted scan variant consumes (``iterative.run_iterative_session_seeds``).
+    """
+    num = len(faults)
+    num_parties = len(clients)
+    ledgers = [CommLedger() for _ in range(num)]
+    diags: List[dict] = [{} for _ in range(num)]
+    active = [n_steps] * num
+    any_drop = False
+    for s, fa in enumerate(faults):
+        if fa is None or fa.kind != "dropout":
+            _log_iterative_rounds(ledgers[s], clients, n_steps, bs,
+                                  payload_factor)
+            diags[s]["fault_kind"] = "none" if fa is None else fa.kind
+            diags[s]["parties_survived"] = num_parties
+            if fa is not None:
+                diags[s]["fault_modeled"] = False
+            continue
+        any_drop = True
+        t_drop = fa.iterative_active_steps(n_steps)
+        active[s] = t_drop
+        _log_iterative_rounds(ledgers[s], clients, t_drop, bs,
+                              payload_factor)
+        retry_bytes = 0
+        for _ in range(fa.retry_rounds):
+            r_up, r_dn = ledgers[s].next_round(), ledgers[s].next_round()
+            for c in clients:
+                if c.index == fa.party:
+                    continue
+                nb = payload_factor * bs * c.extractor.rep_dim * 4
+                ledgers[s].log_bytes(c.index, "up", "retry_reps", nb,
+                                     round=r_up)
+                retry_bytes += nb
+            ledgers[s].log_bytes(fa.party, "down", "retry_timeout", 4,
+                                 round=r_dn)
+            retry_bytes += 4
+        diags[s].update({"fault_kind": fa.kind, "fault_stage": fa.stage,
+                         "parties_survived":
+                             fa.parties_survived(num_parties),
+                         "fault_modeled": True,
+                         "fault_retry_rounds": fa.retry_rounds,
+                         "fault_retry_bytes": retry_bytes})
+    return ledgers, (jnp.asarray(active, jnp.int32) if any_drop
+                     else None), diags
+
+
 def _seed_sessions_setup(keys, splits, extractors, ssl_cfgs,
                          cfg: IterativeConfig, make_schedule,
                          clients_per_seed=None, servers=None):
@@ -143,10 +203,15 @@ def _seed_sessions_setup(keys, splits, extractors, ssl_cfgs,
 
 def _finish_seed_results(cfg: IterativeConfig, ledger: CommLedger,
                          clients_all, servers, splits, carries, losses,
-                         extra_diags=None) -> List[VFLResult]:
+                         extra_diags=None, ledgers=None,
+                         per_seed_diags=None, faults=None
+                         ) -> List[VFLResult]:
     """Shared tail of every seed-batched baseline: install the trained
     carries, evaluate per seed, and attach the (shared) ledger — callers
-    copy it per seed when S > 1 (``run_seeds`` does)."""
+    copy it per seed when S > 1 (``run_seeds`` does). Faulted folds pass
+    per-entry ``ledgers`` / ``per_seed_diags`` / ``faults`` instead: a
+    dropped party's test reps are zero-imputed at eval (no estimator in
+    the iterative methods) and the degraded metric is recorded."""
     num_seeds = len(carries)
     results = []
     for s in range(num_seeds):
@@ -154,7 +219,10 @@ def _finish_seed_results(cfg: IterativeConfig, ledger: CommLedger,
         clients = [replace(c, params=ClientParams(*p))
                    for c, p in zip(clients_all[s], cp)]
         servers[s].params = sp
-        name, metric = _evaluate(servers[s], clients, splits[s])
+        fa = faults[s] if faults is not None else None
+        name, metric = _evaluate(
+            servers[s], clients, splits[s],
+            fault=fa if fa is not None and fa.kind == "dropout" else None)
         path = iterative.resolve_mode(cfg.engine_mode)
         diag = {"engine_path": path,
                 "seed_fold": num_seeds,
@@ -165,8 +233,13 @@ def _finish_seed_results(cfg: IterativeConfig, ledger: CommLedger,
                                else None)}
         if extra_diags is not None:
             diag.update(extra_diags)
-        results.append(VFLResult(name, metric, ledger, clients, servers[s],
-                                 diag))
+        if per_seed_diags is not None:
+            diag.update(per_seed_diags[s])
+            diag["degraded_metric"] = float(metric)
+        results.append(VFLResult(name, metric,
+                                 ledgers[s] if ledgers is not None
+                                 else ledger,
+                                 clients, servers[s], diag))
     return results
 
 
@@ -179,6 +252,7 @@ def run_vanilla_seeds(
     clients_per_seed: Optional[Sequence[Optional[List[VFLClient]]]] = None,
     servers: Optional[Sequence[Optional[VFLServer]]] = None,
     ledger: Optional[CommLedger] = None,
+    faults: Optional[Sequence] = None,
 ) -> List[VFLResult]:
     """Vanilla SplitNN VFL over S seeds at once (DESIGN.md §11): every
     seed's whole-session ``lax.scan`` carry stacks on a leading seed axis
@@ -189,26 +263,40 @@ def run_vanilla_seeds(
 
     ``clients_per_seed`` / ``servers`` admit pre-trained per-seed state —
     the chained few-shot + finetune fold threads the folded few-shot
-    output carry straight into this folded finetune session."""
+    output carry straight into this folded finetune session.
+
+    ``faults`` (one Optional[FaultSpec] per entry, §16) switches to
+    per-entry ledgers: a dropout truncates the entry's committed round
+    loop (``active_steps`` — fault mask as data, same compiled session)
+    and charges the retry/timeout rounds; other fault kinds are not
+    modeled by the synchronous loop (``fault_modeled: False``)."""
     cfg = cfg if cfg is not None else IterativeConfig()
+    faulted = faults is not None and any(fa is not None for fa in faults)
     ledger = ledger if ledger is not None else CommLedger()
     clients_all, servers_all, schedules, carries = _seed_sessions_setup(
         keys, splits, extractors, ssl_cfgs, cfg,
         lambda seed0, n: iterative.build_iteration_schedule(
             seed0, n, cfg.batch_size, cfg.iterations),
         clients_per_seed=clients_per_seed, servers=servers)
+    bs = min(cfg.batch_size, splits[0].labels.shape[0])
+    fault_ledgers = active = fault_diags = None
+    if faulted:
+        fault_ledgers, active, fault_diags = _iterative_fault_plan(
+            faults, clients_all[0], cfg.iterations, bs)
     carries, losses = batched.splitnn_sessions_seeds(
         [[c.extractor for c in cl] for cl in clients_all],
         [srv.classifier for srv in servers_all], cfg.iter_hparams(),
         carries, [sp.aligned for sp in splits],
         [sp.labels for sp in splits], schedules, mode=cfg.engine_mode,
-        mesh=cfg.mesh)
+        mesh=cfg.mesh, active_steps=active)
 
-    bs = min(cfg.batch_size, splits[0].labels.shape[0])
-    _log_iterative_rounds(ledger, clients_all[0], cfg.iterations, bs)
+    if not faulted:
+        _log_iterative_rounds(ledger, clients_all[0], cfg.iterations, bs)
     return _finish_seed_results(cfg, ledger, clients_all, servers_all,
                                 splits, carries, losses,
-                                {"iterations": cfg.iterations})
+                                {"iterations": cfg.iterations},
+                                ledgers=fault_ledgers,
+                                per_seed_diags=fault_diags, faults=faults)
 
 
 def run_vanilla(
@@ -220,10 +308,12 @@ def run_vanilla(
     clients: Optional[List[VFLClient]] = None,
     server: Optional[VFLServer] = None,
     ledger: Optional[CommLedger] = None,
+    fault=None,
 ) -> VFLResult:
     return run_vanilla_seeds([key], [split], [extractors], [ssl_cfgs], cfg,
                              clients_per_seed=[clients], servers=[server],
-                             ledger=ledger)[0]
+                             ledger=ledger,
+                             faults=None if fault is None else [fault])[0]
 
 
 def _fedbcd_schedule(seed0: int, n: int, batch_size: int,
@@ -250,30 +340,41 @@ def run_fedbcd_seeds(
     extractors: Sequence[Sequence[Model]],
     ssl_cfgs: Sequence[Sequence[SSLConfig]],
     cfg: Optional[IterativeConfig] = None,
+    faults: Optional[Sequence] = None,
 ) -> List[VFLResult]:
     """FedBCD-p over S seeds at once: per round, one rep exchange then Q
     parallel local updates on the stale partial gradients (clients) / stale
     reps (server) — the whole multi-seed session one folded scan program
     (DESIGN.md §11), where it used to re-``jax.jit`` an ad-hoc round step
-    per call."""
+    per call. ``faults``: see :func:`run_vanilla_seeds` — the dropout
+    horizon counts communication ROUNDS (the scan axis), not local
+    updates."""
     cfg = cfg if cfg is not None else IterativeConfig()
+    faulted = faults is not None and any(fa is not None for fa in faults)
     ledger = CommLedger()
     rounds = cfg.iterations // cfg.fedbcd_q
     clients_all, servers_all, schedules, carries = _seed_sessions_setup(
         keys, splits, extractors, ssl_cfgs, cfg,
         lambda seed0, n: _fedbcd_schedule(seed0, n, cfg.batch_size, rounds))
+    bs = min(cfg.batch_size, splits[0].labels.shape[0])
+    fault_ledgers = active = fault_diags = None
+    if faulted:
+        fault_ledgers, active, fault_diags = _iterative_fault_plan(
+            faults, clients_all[0], rounds, bs)
     carries, losses = batched.fedbcd_sessions_seeds(
         [[c.extractor for c in cl] for cl in clients_all],
         [srv.classifier for srv in servers_all], cfg.iter_hparams(),
         cfg.fedbcd_q, carries, [sp.aligned for sp in splits],
         [sp.labels for sp in splits], schedules, mode=cfg.engine_mode,
-        mesh=cfg.mesh)
+        mesh=cfg.mesh, active_steps=active)
 
-    bs = min(cfg.batch_size, splits[0].labels.shape[0])
-    _log_iterative_rounds(ledger, clients_all[0], rounds, bs)
+    if not faulted:
+        _log_iterative_rounds(ledger, clients_all[0], rounds, bs)
     return _finish_seed_results(cfg, ledger, clients_all, servers_all,
                                 splits, carries, losses,
-                                {"rounds": rounds, "Q": cfg.fedbcd_q})
+                                {"rounds": rounds, "Q": cfg.fedbcd_q},
+                                ledgers=fault_ledgers,
+                                per_seed_diags=fault_diags, faults=faults)
 
 
 def run_fedbcd(
@@ -282,9 +383,10 @@ def run_fedbcd(
     extractors: Sequence[Model],
     ssl_cfgs: Sequence[SSLConfig],
     cfg: Optional[IterativeConfig] = None,
+    fault=None,
 ) -> VFLResult:
-    return run_fedbcd_seeds([key], [split], [extractors], [ssl_cfgs],
-                            cfg)[0]
+    return run_fedbcd_seeds([key], [split], [extractors], [ssl_cfgs], cfg,
+                            faults=None if fault is None else [fault])[0]
 
 
 def run_fedcvt_seeds(
@@ -293,6 +395,7 @@ def run_fedcvt_seeds(
     extractors: Sequence[Sequence[Model]],
     ssl_cfgs: Sequence[Sequence[SSLConfig]],
     cfg: Optional[IterativeConfig] = None,
+    faults: Optional[Sequence] = None,
 ) -> List[VFLResult]:
     """FedCVT-style semi-supervised baseline over S seeds at once: vanilla
     iterative VFL + per-iteration cross-view training-set expansion. Each
@@ -300,8 +403,11 @@ def run_fedcvt_seeds(
     estimated from the overlap batch and samples whose classifier
     confidence exceeds the threshold train with their pseudo labels. The
     whole multi-seed session is one folded scan program
-    (``engine.batched.fedcvt_sessions_seeds``, DESIGN.md §11)."""
+    (``engine.batched.fedcvt_sessions_seeds``, DESIGN.md §11).
+    ``faults``: see :func:`run_vanilla_seeds` (retry payloads carry the
+    same 2× factor as the normal rounds)."""
     cfg = cfg if cfg is not None else IterativeConfig()
+    faulted = faults is not None and any(fa is not None for fa in faults)
     ledger = CommLedger()
     clients_all, servers_all, schedules, carries = _seed_sessions_setup(
         keys, splits, extractors, ssl_cfgs, cfg,
@@ -313,21 +419,28 @@ def run_fedcvt_seeds(
         0, [x.shape[0] for x in sp.unaligned],
         min(cfg.batch_size, sp.labels.shape[0]), cfg.iterations)
         for sp in splits]
+    bs = min(cfg.batch_size, splits[0].labels.shape[0])
+    fault_ledgers = active = fault_diags = None
+    if faulted:
+        fault_ledgers, active, fault_diags = _iterative_fault_plan(
+            faults, clients_all[0], cfg.iterations, bs, payload_factor=2)
     carries, losses = batched.fedcvt_sessions_seeds(
         [[c.extractor for c in cl] for cl in clients_all],
         [srv.classifier for srv in servers_all], cfg.iter_hparams(),
         carries, [sp.aligned for sp in splits],
         [sp.labels for sp in splits], schedules,
         [sp.unaligned for sp in splits], u_schedules,
-        mode=cfg.engine_mode, mesh=cfg.mesh)
+        mode=cfg.engine_mode, mesh=cfg.mesh, active_steps=active)
 
     # overlap reps + unaligned reps up; both gradients down
-    bs = min(cfg.batch_size, splits[0].labels.shape[0])
-    _log_iterative_rounds(ledger, clients_all[0], cfg.iterations, bs,
-                          payload_factor=2)
+    if not faulted:
+        _log_iterative_rounds(ledger, clients_all[0], cfg.iterations, bs,
+                              payload_factor=2)
     return _finish_seed_results(cfg, ledger, clients_all, servers_all,
                                 splits, carries, losses,
-                                {"iterations": cfg.iterations})
+                                {"iterations": cfg.iterations},
+                                ledgers=fault_ledgers,
+                                per_seed_diags=fault_diags, faults=faults)
 
 
 def run_fedcvt(
@@ -336,6 +449,7 @@ def run_fedcvt(
     extractors: Sequence[Model],
     ssl_cfgs: Sequence[SSLConfig],
     cfg: Optional[IterativeConfig] = None,
+    fault=None,
 ) -> VFLResult:
-    return run_fedcvt_seeds([key], [split], [extractors], [ssl_cfgs],
-                            cfg)[0]
+    return run_fedcvt_seeds([key], [split], [extractors], [ssl_cfgs], cfg,
+                            faults=None if fault is None else [fault])[0]

@@ -65,12 +65,15 @@ def make_client(key: jax.Array, index: int, extractor: Model, num_classes: int,
 def ssl_task_for(client: VFLClient, x_labeled: jnp.ndarray,
                  y_pseudo: jnp.ndarray, x_unlabeled: jnp.ndarray,
                  labeled_mask: Optional[jnp.ndarray] = None,
-                 unlabeled_mask: Optional[jnp.ndarray] = None) -> PartyTask:
+                 unlabeled_mask: Optional[jnp.ndarray] = None,
+                 step_valid: Optional[jnp.ndarray] = None) -> PartyTask:
     """Package this client's local-SSL problem for the engine layer.
 
     Pass ``labeled_mask`` / ``unlabeled_mask`` for the masked fixed-shape
     sessions of few-shot phase ⑤' (data padded to a static capacity; masked
-    rows contribute zero loss — DESIGN.md §9)."""
+    rows contribute zero loss — DESIGN.md §9), ``step_valid`` for faulted
+    sessions (per-step commit mask — stragglers, dropped or
+    representation-only parties; DESIGN.md §16)."""
     return PartyTask(extractor=client.extractor, head=client.head,
                      params=PartyParams(*client.params),
                      ssl_cfg=client.ssl_cfg,
@@ -78,7 +81,8 @@ def ssl_task_for(client: VFLClient, x_labeled: jnp.ndarray,
                      x_unlabeled=x_unlabeled,
                      feature_mean=client.feature_mean,
                      labeled_mask=labeled_mask,
-                     unlabeled_mask=unlabeled_mask)
+                     unlabeled_mask=unlabeled_mask,
+                     step_valid=step_valid)
 
 
 def local_ssl_train(

@@ -42,6 +42,8 @@ from repro.core.server import (VFLServer, fit_aux_classifiers_seeds,
 from repro.core.ssl import SSLConfig
 from repro.data.vertical import VerticalSplit
 from repro.models.extractors import Model
+from repro.scenarios.faults import (POINT_EVAL, POINT_ROUND2, POINT_SSL,
+                                    POINT_UPLOAD1, POINT_UPLOAD2, FaultSpec)
 
 
 @dataclass(frozen=True)
@@ -130,8 +132,14 @@ def _build_clients(key, split: VerticalSplit, extractors: Sequence[Model],
 
 
 def _evaluate(server: VFLServer, clients: Sequence[VFLClient],
-              split: VerticalSplit) -> tuple:
+              split: VerticalSplit, fault: Optional[FaultSpec] = None,
+              h_o_final: Optional[Sequence[jnp.ndarray]] = None,
+              fkey: Optional[jax.Array] = None,
+              use_kernels: bool = False) -> tuple:
     test_reps = [c.extract(x) for c, x in zip(clients, split.test_aligned)]
+    if fault is not None:
+        test_reps = _faulted_test_reps(test_reps, fault, h_o_final, fkey,
+                                       use_kernels)
     logits = server.predict_logits(test_reps)
     if split.num_classes == 2:
         scores = jax.nn.softmax(logits, axis=-1)[:, 1]
@@ -156,6 +164,149 @@ def _log_seeds(ledger: CommLedger, party: int, direction: str, tag: str,
             f"seed-batched run broke ledger byte-identity for {tag!r}: "
             f"per-seed payload bytes {sorted(sizes)}")
     ledger.log_bytes(party, direction, tag, sizes.pop(), round=round)
+
+
+# -------------------------------------------------------- fault injection
+# the fault-injection PRNG stream is folded off the entry's ORIGINAL key
+# with a fixed prime, disjoint from every key the protocol splits itself
+_FAULT_STREAM = 15485863
+
+
+def _phase_round(ledger: CommLedger, entry_ledgers) -> object:
+    """Advance the round counter for one protocol phase: the shared
+    prototype ledger on the fault-free path, every per-entry ledger on a
+    faulted fold (healthy entries keep the prototype round sequence)."""
+    if entry_ledgers is None:
+        return ledger.next_round()
+    return [led.next_round() for led in entry_ledgers]
+
+
+def _log_phase(ledger: CommLedger, entry_ledgers, party: int,
+               direction: str, tag: str, payloads: Sequence, rounds,
+               skip=None) -> None:
+    """Log one transfer of ``party`` across the S stacked entries.
+    Fault-free folds share one prototype ledger (``_log_seeds``, with the
+    byte-identity assertion); faulted folds carry one ledger PER entry so
+    a dropped party's missing upload (``skip[s]``) stays entry-local
+    while healthy entries' ledgers remain content-identical."""
+    if entry_ledgers is None:
+        _log_seeds(ledger, party, direction, tag, payloads, rounds)
+        return
+    for s, led in enumerate(entry_ledgers):
+        if skip is not None and skip[s]:
+            continue
+        led.log_bytes(party, direction, tag, nbytes(payloads[s]),
+                      round=rounds[s])
+
+
+def _drop_skip(faults, k: int, point: int, num_seeds: int):
+    """Per-entry skip flags for party k's transfer at a protocol point."""
+    if faults is None:
+        return None
+    return [faults[s] is not None and faults[s].drops(k, point)
+            for s in range(num_seeds)]
+
+
+def _dp_noised(fkey: jax.Array, phase: int, party: int,
+               fault: Optional[FaultSpec], arr: jnp.ndarray) -> jnp.ndarray:
+    """``dp_upload`` fault: σ·std(arr) Gaussian noise on the faulted
+    party's payload at the given protocol phase index. Bytes on the wire
+    are unchanged — privacy costs accuracy, not communication."""
+    if (fault is None or fault.kind != "dp_upload"
+            or fault.party != party or fault.dp_sigma <= 0):
+        return arr
+    k = jax.random.fold_in(fkey, phase)
+    scale = fault.dp_sigma * jnp.std(arr)
+    return arr + scale * jax.random.normal(k, arr.shape).astype(arr.dtype)
+
+
+def _reconstruct_dropped(reps_all, stale_all, faults, point: int,
+                         use_kernels: bool) -> None:
+    """Server-side Eq. 10 recovery of dropped parties' missing uploads:
+    Ĥ^k = softmax(H_a H̄_aᵀ/√d) H̄_k with a the lowest-index surviving
+    party, H_a its fresh upload and H̄ the last payloads the server still
+    holds (DESIGN.md §16). Entries sharing (dropped, anchor) fold into ONE
+    batched SDPA program (§15). A party that never uploaded (stale zeros)
+    reconstructs to zeros — the same code path, degrading gracefully."""
+    from repro.core import estimator
+    groups: dict = {}
+    for s, fa in enumerate(faults):
+        if fa is None or fa.kind != "dropout":
+            continue
+        num_parties = len(reps_all[s])
+        alive = [k for k in range(num_parties) if not fa.drops(k, point)]
+        for k in range(num_parties):
+            if fa.drops(k, point):
+                groups.setdefault((k, alive[0]), []).append(s)
+    for (k, anchor), entries in sorted(groups.items()):
+        est = estimator.sdpa_transform_batched(
+            jnp.stack([reps_all[s][anchor] for s in entries]),
+            jnp.stack([stale_all[s][anchor] for s in entries]),
+            jnp.stack([stale_all[s][k] for s in entries]),
+            use_kernel=use_kernels)
+        for i, s in enumerate(entries):
+            reps_all[s][k] = est[i].astype(reps_all[s][k].dtype)
+
+
+def _fault_step_valid(fault: Optional[FaultSpec], party: int,
+                      n_labeled: int, hp, skip_all: bool) -> jnp.ndarray:
+    """(n_steps,) per-step commit mask for one party's SSL session in a
+    faulted fold (§16): all-zeros for a dropped / representation-only
+    party, the leading ⌊fraction·epochs⌋ whole epochs for a straggler,
+    all-ones otherwise. EVERY party gets a mask when the fold carries any
+    fault, so the stacked session keeps one shape — the mask is data,
+    never compile-time structure."""
+    n_steps = engine.schedule_steps(n_labeled, hp)
+    if skip_all:
+        return jnp.zeros((n_steps,), jnp.float32)
+    if (fault is not None and fault.kind == "straggler"
+            and fault.party == party):
+        steps_per_epoch = n_steps // max(hp.epochs, 1)
+        active = int(hp.epochs * fault.epoch_fraction) * steps_per_epoch
+        return (jnp.arange(n_steps) < active).astype(jnp.float32)
+    return jnp.ones((n_steps,), jnp.float32)
+
+
+def _faulted_test_reps(test_reps, fault: FaultSpec, h_o_final, fkey,
+                       use_kernels: bool):
+    """Degraded-serving view of the test forward (§16): a dropped party's
+    test representations are Eq. 10-reconstructed from the final overlap
+    reps (zero-imputed when no estimator memory exists — the iterative
+    baselines), and a dp_upload party's payload carries the same σ·std
+    noise as its training uploads."""
+    from repro.core import estimator
+    reps = list(test_reps)
+    num_parties = len(reps)
+    if fault.kind == "dp_upload":
+        if fkey is not None and fault.party < num_parties:
+            reps[fault.party] = _dp_noised(fkey, 5, fault.party, fault,
+                                           reps[fault.party])
+        return reps
+    if fault.kind != "dropout":
+        return reps
+    alive = [j for j in range(num_parties)
+             if not fault.drops(j, POINT_EVAL)]
+    for k in range(num_parties):
+        if fault.drops(k, POINT_EVAL):
+            if h_o_final is None:
+                reps[k] = jnp.zeros_like(reps[k])
+            else:
+                reps[k] = estimator.sdpa_transform(
+                    reps[alive[0]], h_o_final[alive[0]], h_o_final[k],
+                    use_kernel=use_kernels).astype(reps[k].dtype)
+    return reps
+
+
+def _fault_diags(fault: Optional[FaultSpec], num_parties: int,
+                 metric: float) -> dict:
+    """Per-entry fault diagnostics every faulted row reports (rows.py)."""
+    d = {"fault_kind": fault.kind if fault is not None else "none",
+         "parties_survived": (fault.parties_survived(num_parties)
+                              if fault is not None else num_parties),
+         "degraded_metric": float(metric)}
+    if fault is not None and fault.kind == "dropout":
+        d["fault_stage"] = fault.stage
+    return d
 
 
 def fewshot_phase5_labels(client: VFLClient, x_o: jnp.ndarray,
@@ -183,6 +334,8 @@ def _one_shot_seeds(
     ledger: Optional[CommLedger] = None,
     clients_per_seed: Optional[Sequence[Optional[List[VFLClient]]]] = None,
     final_reps_out: Optional[list] = None,
+    faults: Optional[Sequence[Optional[FaultSpec]]] = None,
+    ledgers: Optional[Sequence[CommLedger]] = None,
 ) -> List[VFLResult]:
     """Alg. 1 over S seeds at once. Per-seed PRNG streams are split exactly
     like the historical single-seed runner's (S = 1 *is* the single-seed
@@ -190,12 +343,32 @@ def _one_shot_seeds(
     classifier fit — execute seed-batched (DESIGN.md §10). All results
     share ``ledger``; multi-seed callers copy it per result.
     ``final_reps_out`` (if given) receives the step-⑤ refreshed overlap
-    reps per seed, so few-shot's ①' needn't re-extract them."""
+    reps per seed, so few-shot's ①' needn't re-extract them.
+
+    ``faults`` (one optional :class:`FaultSpec` per entry, DESIGN.md §16)
+    switches the fold to per-entry ``ledgers``: a dropped party's missing
+    uploads are skipped entry-locally and its H_o^k reconstructed by the
+    Eq. 10 estimator, stragglers/representation-only parties ride the
+    §9 mask machinery as ``step_valid`` data, dp_upload entries noise
+    their payloads — shapes never change, so the faulted fold runs the
+    SAME stacked programs under unchanged session-cache keys."""
     cfg = cfg if cfg is not None else ProtocolConfig()
     ledger = ledger if ledger is not None else CommLedger()
     num_seeds = len(keys)
     num_parties = len(splits[0].aligned)
     mesh = engine.resolve_mesh(cfg.mesh)
+    if faults is not None and len(faults) != num_seeds:
+        raise ValueError("faults needs one entry (FaultSpec or None) per "
+                         "stacked seed/scenario entry")
+    faulted = faults is not None
+    if not faulted:
+        faults = [None] * num_seeds
+    entry_ledgers = fkeys = None
+    if faulted:
+        entry_ledgers = (list(ledgers) if ledgers is not None
+                         else [CommLedger() for _ in range(num_seeds)])
+        fkeys = [jax.random.fold_in(keys[s], _FAULT_STREAM)
+                 for s in range(num_seeds)]
 
     st_keys, k_srvs, clients_all, servers = [], [], [], []
     for s in range(num_seeds):
@@ -209,14 +382,31 @@ def _one_shot_seeds(
         clients_all.append(clients)
         servers.append(VFLServer(num_classes=splits[s].num_classes))
 
-    # ① clients upload overlap representations
+    # ① clients upload overlap representations. A party dropped before
+    # this point never shows up: the server zero-imputes its H_o^k slot
+    # (fixed shapes — the fold never re-compiles) and no event is logged.
     reps_all = [[c.extract(x_o).astype(cfg.rep_dtype)
                  for c, x_o in zip(clients_all[s], splits[s].aligned)]
                 for s in range(num_seeds)]
-    r1 = ledger.next_round()
+    if faulted:
+        for s, fa in enumerate(faults):
+            if fa is None:
+                continue
+            for k in range(num_parties):
+                if fa.drops(k, POINT_UPLOAD1):
+                    reps_all[s][k] = jnp.zeros_like(reps_all[s][k])
+                else:
+                    reps_all[s][k] = _dp_noised(fkeys[s], 1, k, fa,
+                                                reps_all[s][k])
+    r1 = _phase_round(ledger, entry_ledgers)
     for k in range(num_parties):
-        _log_seeds(ledger, k, "up", "reps_overlap",
-                   [reps_all[s][k] for s in range(num_seeds)], r1)
+        _log_phase(ledger, entry_ledgers, k, "up", "reps_overlap",
+                   [reps_all[s][k] for s in range(num_seeds)], r1,
+                   skip=_drop_skip(faults if faulted else None, k,
+                                   POINT_UPLOAD1, num_seeds))
+    # the server's last-seen view of every party, AFTER imputation/noise —
+    # what Eq. 10 reconstruction attends over at step ⑤
+    stale_reps = ([list(reps) for reps in reps_all] if faulted else None)
 
     # ② server computes and sends partial gradients (+ class count C);
     # optional label-DP-style Gaussian noise (the paper's §6 notes such
@@ -234,10 +424,12 @@ def _one_shot_seeds(
                 noised.append(g + scale * jax.random.normal(kn, g.shape))
             grads = noised
         grads_all.append(grads)
-    r2 = ledger.next_round()
+    r2 = _phase_round(ledger, entry_ledgers)
     for k in range(num_parties):
-        _log_seeds(ledger, k, "down", "partial_grads",
-                   [grads_all[s][k] for s in range(num_seeds)], r2)
+        _log_phase(ledger, entry_ledgers, k, "down", "partial_grads",
+                   [grads_all[s][k] for s in range(num_seeds)], r2,
+                   skip=_drop_skip(faults if faulted else None, k,
+                                   POINT_SSL, num_seeds))
 
     # ③ gradient clustering → pseudo labels;  ④ local SSL — both engine-
     # side and seed-batched: the S·K gradient matrices cluster in one
@@ -266,17 +458,27 @@ def _one_shot_seeds(
         if "fallback" in km_info:
             diags[s]["kernel_fallback"] = km_info["fallback"]
     tasks_per_seed = []
+    hp = cfg.ssl_hparams()
     for s in range(num_seeds):
         tasks = []
+        fa = faults[s]
         for c, pseudo, x_o, x_u in zip(clients_all[s], pseudo_all[s],
                                        splits[s].aligned,
                                        splits[s].unaligned):
             diags[s]["kmeans_purity"].append(clustering.cluster_purity(
                 pseudo, splits[s].labels, splits[s].num_classes))
+            # faulted folds give EVERY party a per-step commit mask (§16):
+            # all-ones healthy, truncated straggler, all-zero dropped /
+            # representation-only — mask as data, one stacked shape
+            sv = (_fault_step_valid(fa, c.index, x_o.shape[0], hp,
+                                    skip_all=(fa is not None
+                                              and fa.skips_ssl(c.index)))
+                  if faulted else None)
             # equal-shape overlap variants pad x_o to a fixed capacity; the
             # split's validity mask zeroes the padded rows out of the loss
             tasks.append(ssl_task_for(c, x_o, pseudo, x_u,
-                                      labeled_mask=splits[s].aligned_mask))
+                                      labeled_mask=splits[s].aligned_mask,
+                                      step_valid=sv))
         diags[s]["pseudo_labels"] = pseudo_all[s]   # Ŷ_o^k — few-shot ⑤'
         tasks_per_seed.append(tasks)                # reuses them (Alg. 2)
     params_all, metrics_all, paths = engine.train_clients_ssl_seeds(
@@ -290,14 +492,28 @@ def _one_shot_seeds(
         clients_all[s] = [replace(c, params=p)
                           for c, p in zip(clients_all[s], params_all[s])]
 
-    # ⑤ upload refreshed reps;  ⑥ server trains classifier (seed-batched)
+    # ⑤ upload refreshed reps;  ⑥ server trains classifier (seed-batched).
+    # Parties dropped by now upload nothing: the server reconstructs their
+    # slot via Eq. 10 attention from the lowest-index survivor's refreshed
+    # upload over the stale step-① payloads it still holds (§16).
     reps_all = [[c.extract(x_o).astype(cfg.rep_dtype)
                  for c, x_o in zip(clients_all[s], splits[s].aligned)]
                 for s in range(num_seeds)]
-    r3 = ledger.next_round()
+    if faulted:
+        for s, fa in enumerate(faults):
+            if fa is None:
+                continue
+            for k in range(num_parties):
+                reps_all[s][k] = _dp_noised(fkeys[s], 2, k, fa,
+                                            reps_all[s][k])
+        _reconstruct_dropped(reps_all, stale_reps, faults, POINT_UPLOAD2,
+                             cfg.use_kernels)
+    r3 = _phase_round(ledger, entry_ledgers)
     for k in range(num_parties):
-        _log_seeds(ledger, k, "up", "reps_overlap_refreshed",
-                   [reps_all[s][k] for s in range(num_seeds)], r3)
+        _log_phase(ledger, entry_ledgers, k, "up", "reps_overlap_refreshed",
+                   [reps_all[s][k] for s in range(num_seeds)], r3,
+                   skip=_drop_skip(faults if faulted else None, k,
+                                   POINT_UPLOAD2, num_seeds))
     train_classifier_seeds(k_srvs, servers, reps_all,
                            [sp.labels for sp in splits],
                            epochs=cfg.server_epochs,
@@ -308,9 +524,16 @@ def _one_shot_seeds(
 
     results = []
     for s in range(num_seeds):
-        name, metric = _evaluate(servers[s], clients_all[s], splits[s])
-        results.append(VFLResult(name, metric, ledger, clients_all[s],
-                                 servers[s], diags[s]))
+        name, metric = _evaluate(
+            servers[s], clients_all[s], splits[s], fault=faults[s],
+            h_o_final=reps_all[s] if faulted else None,
+            fkey=fkeys[s] if faulted else None,
+            use_kernels=cfg.use_kernels)
+        if faulted:
+            diags[s].update(_fault_diags(faults[s], num_parties, metric))
+        results.append(VFLResult(name, metric,
+                                 entry_ledgers[s] if faulted else ledger,
+                                 clients_all[s], servers[s], diags[s]))
     return results
 
 
@@ -322,9 +545,11 @@ def run_one_shot(
     cfg: Optional[ProtocolConfig] = None,
     ledger: Optional[CommLedger] = None,
     clients: Optional[List[VFLClient]] = None,
+    fault: Optional[FaultSpec] = None,
 ) -> VFLResult:
     return _one_shot_seeds([key], [split], [extractors], [ssl_cfgs], cfg,
-                           ledger=ledger, clients_per_seed=[clients])[0]
+                           ledger=ledger, clients_per_seed=[clients],
+                           faults=None if fault is None else [fault])[0]
 
 
 def _few_shot_finetune_seeds(
@@ -334,6 +559,7 @@ def _few_shot_finetune_seeds(
     ssl_cfgs: Sequence[Sequence[SSLConfig]],
     cfg: Optional[ProtocolConfig] = None,
     finetune_iterations: int = 200,
+    faults: Optional[Sequence[Optional[FaultSpec]]] = None,
 ) -> List[VFLResult]:
     """Tab. 1's last row over S seeds at once: the seed-batched few-shot
     pass hands its per-seed output state (trained clients + fitted server)
@@ -342,6 +568,11 @@ def _few_shot_finetune_seeds(
     between, and the shared ledger accumulates both stages' transfers."""
     from repro.core import baselines
 
+    if faults is not None and any(fa is not None for fa in faults):
+        raise ValueError(
+            "few_shot_finetune does not support fault injection: the "
+            "chained finetune stage is the iterative round loop — model "
+            "its dropout cost with run_vanilla_seeds(faults=...) instead")
     cfg = cfg if cfg is not None else ProtocolConfig()
     k1s, k2s = [], []
     for s in range(len(keys)):
@@ -389,18 +620,37 @@ def _few_shot_seeds(
     ssl_cfgs: Sequence[Sequence[SSLConfig]],
     cfg: Optional[ProtocolConfig] = None,
     ledger: Optional[CommLedger] = None,
+    faults: Optional[Sequence[Optional[FaultSpec]]] = None,
 ) -> List[VFLResult]:
     """Alg. 2 over S seeds at once, continuing from the seed-batched
     one-shot pass: the aux-classifier fits, the ③' SDPA estimation +
     Eq. 8-9 gating (``engine.fewshot_probs_seeds`` — one batched program
     per party over the stacked seed axis, DESIGN.md §15), the masked
     phase-⑤' SSL sessions, and the final classifier re-fit all execute
-    seed-batched with the exact single-seed key discipline."""
+    seed-batched with the exact single-seed key discipline.
+
+    ``faults`` (DESIGN.md §16) threads straight through the one-shot pass
+    (per-entry ledgers, same objects) and then governs round 2: a dropped
+    party skips every round-2 event — its final upload is Eq. 10-
+    reconstructed from the surviving anchor over the ⑤-era overlap view —
+    while stragglers/representation-only parties re-enter ⑤' as
+    ``step_valid`` masks on the SAME stacked session shapes."""
     cfg = cfg if cfg is not None else ProtocolConfig()
     ledger = ledger if ledger is not None else CommLedger()
     num_seeds = len(keys)
     num_parties = len(splits[0].aligned)
     mesh = engine.resolve_mesh(cfg.mesh)
+    if faults is not None and len(faults) != num_seeds:
+        raise ValueError("faults needs one entry (FaultSpec or None) per "
+                         "stacked seed/scenario entry")
+    faulted = faults is not None
+    if not faulted:
+        faults = [None] * num_seeds
+    entry_ledgers = fkeys = None
+    if faulted:
+        entry_ledgers = [CommLedger() for _ in range(num_seeds)]
+        fkeys = [jax.random.fold_in(keys[s], _FAULT_STREAM)
+                 for s in range(num_seeds)]
 
     st_keys, k_ones = [], []
     for s in range(num_seeds):
@@ -409,7 +659,9 @@ def _few_shot_seeds(
         k_ones.append(k_one)
     h_o_all: list = []
     ones = _one_shot_seeds(k_ones, splits, extractors, ssl_cfgs, cfg,
-                           ledger=ledger, final_reps_out=h_o_all)
+                           ledger=ledger, final_reps_out=h_o_all,
+                           faults=faults if faulted else None,
+                           ledgers=entry_ledgers)
     clients_all = [r.clients for r in ones]
     servers = [r.server for r in ones]
     diags = [dict(r.diagnostics) for r in ones]
@@ -421,10 +673,22 @@ def _few_shot_seeds(
     h_u_all = [[c.extract(x).astype(cfg.rep_dtype)
                 for c, x in zip(clients_all[s], splits[s].unaligned)]
                for s in range(num_seeds)]
-    r3 = max(e.round for e in ledger.events)   # bundled with the ⑤ upload
+    if faulted:
+        for s, fa in enumerate(faults):
+            if fa is None:
+                continue
+            for k in range(num_parties):
+                h_u_all[s][k] = _dp_noised(fkeys[s], 3, k, fa,
+                                           h_u_all[s][k])
+    if entry_ledgers is None:   # bundled with the ⑤ upload
+        r3 = max(e.round for e in ledger.events)
+    else:
+        r3 = [max(e.round for e in led.events) for led in entry_ledgers]
     for k in range(num_parties):
-        _log_seeds(ledger, k, "up", "reps_unaligned",
-                   [h_u_all[s][k] for s in range(num_seeds)], r3)
+        _log_phase(ledger, entry_ledgers, k, "up", "reps_unaligned",
+                   [h_u_all[s][k] for s in range(num_seeds)], r3,
+                   skip=_drop_skip(faults if faulted else None, k,
+                                   POINT_ROUND2, num_seeds))
 
     # ②' server fits aux classifiers f_c^k (seed-batched) and reuses the
     # joint f_c
@@ -450,7 +714,7 @@ def _few_shot_seeds(
         diags[s]["sdpa_fold"] = num_seeds
     h_o_stacks = [jnp.stack([h_o_all[s][j] for s in range(num_seeds)])
                   for j in range(num_parties)]
-    r4 = ledger.next_round()
+    r4 = _phase_round(ledger, entry_ledgers)
     for k_idx in range(num_parties):
         h_u_stack = jnp.stack([h_u_all[s][k_idx] for s in range(num_seeds)])
         probs_stack = engine.fewshot_probs_seeds(
@@ -460,8 +724,11 @@ def _few_shot_seeds(
             probs_all[s].append(probs_stack[s])
             diags[s]["fewshot_gate_rate"].append(
                 _safe_mean(probs_stack[s] > 0))
-        _log_seeds(ledger, k_idx, "down", "pseudo_label_probs",
-                   [probs_all[s][k_idx] for s in range(num_seeds)], r4)
+        _log_phase(ledger, entry_ledgers, k_idx, "down",
+                   "pseudo_label_probs",
+                   [probs_all[s][k_idx] for s in range(num_seeds)], r4,
+                   skip=_drop_skip(faults if faulted else None, k_idx,
+                                   POINT_ROUND2, num_seeds))
 
     # ⑤' clients expand the labeled set and re-run SSL (Alg. 2 l.11-19) as
     # masked fixed-shape sessions (DESIGN.md §9): every party's labeled set
@@ -479,8 +746,10 @@ def _few_shot_seeds(
         st_keys[s], ks = jax.random.split(st_keys[s])
         kss.append(ks)
     tasks_per_seed = []
+    hp = cfg.ssl_hparams()
     for s in range(num_seeds):
         tasks = []
+        fa = faults[s]
         for c, probs, pseudo, x_o, x_u in zip(
                 clients_all[s], probs_all[s], diags[s]["pseudo_labels"],
                 splits[s].aligned, splits[s].unaligned):
@@ -490,6 +759,13 @@ def _few_shot_seeds(
                     kb, jnp.clip(probs, 0.0, 1.0)).astype(jnp.float32)
             else:
                 take = (probs > 0).astype(jnp.float32)
+            # a party absent from round 2 never received p̂: nothing gates
+            # in, and its ⑤' session commits zero steps (step_valid below)
+            skip_r2 = (fa is not None
+                       and (fa.skips_ssl(c.index)
+                            or fa.drops(c.index, POINT_ROUND2)))
+            if skip_r2:
+                take = jnp.zeros_like(take)
             x_lab = jnp.concatenate([x_o, x_u], axis=0)
             y_lab = fewshot_phase5_labels(c, x_o, x_u, pseudo,
                                           cfg.fewshot_relabel_overlap)
@@ -500,9 +776,13 @@ def _few_shot_seeds(
                       if splits[s].aligned_mask is None
                       else splits[s].aligned_mask.astype(jnp.float32))
             lab_mask = jnp.concatenate([o_mask, take])
+            sv = (_fault_step_valid(fa, c.index, x_lab.shape[0], hp,
+                                    skip_all=skip_r2)
+                  if faulted else None)
             tasks.append(ssl_task_for(c, x_lab, y_lab, x_u,
                                       labeled_mask=lab_mask,
-                                      unlabeled_mask=1.0 - take))
+                                      unlabeled_mask=1.0 - take,
+                                      step_valid=sv))
             diags[s].setdefault("fewshot_take_rate", []).append(
                 _safe_mean(take))
         tasks_per_seed.append(tasks)
@@ -517,14 +797,27 @@ def _few_shot_seeds(
         clients_all[s] = [replace(c, params=p)
                           for c, p in zip(clients_all[s], params_all[s])]
 
-    # ⑥' final upload + classifier re-fit (seed-batched)
+    # ⑥' final upload + classifier re-fit (seed-batched). Round-2-dropped
+    # parties upload nothing; their slot is Eq. 10-reconstructed from the
+    # anchor's final upload over the ⑤-era overlap view (h_o_all).
     reps_all = [[c.extract(x_o).astype(cfg.rep_dtype)
                  for c, x_o in zip(clients_all[s], splits[s].aligned)]
                 for s in range(num_seeds)]
-    r5 = ledger.next_round()
+    if faulted:
+        for s, fa in enumerate(faults):
+            if fa is None:
+                continue
+            for k in range(num_parties):
+                reps_all[s][k] = _dp_noised(fkeys[s], 4, k, fa,
+                                            reps_all[s][k])
+        _reconstruct_dropped(reps_all, h_o_all, faults, POINT_ROUND2,
+                             cfg.use_kernels)
+    r5 = _phase_round(ledger, entry_ledgers)
     for k in range(num_parties):
-        _log_seeds(ledger, k, "up", "reps_overlap_final",
-                   [reps_all[s][k] for s in range(num_seeds)], r5)
+        _log_phase(ledger, entry_ledgers, k, "up", "reps_overlap_final",
+                   [reps_all[s][k] for s in range(num_seeds)], r5,
+                   skip=_drop_skip(faults if faulted else None, k,
+                                   POINT_ROUND2, num_seeds))
     kfs = []
     for s in range(num_seeds):
         st_keys[s], kf = jax.random.split(st_keys[s])
@@ -537,9 +830,16 @@ def _few_shot_seeds(
 
     results = []
     for s in range(num_seeds):
-        name, metric = _evaluate(servers[s], clients_all[s], splits[s])
-        results.append(VFLResult(name, metric, ledger, clients_all[s],
-                                 servers[s], diags[s]))
+        name, metric = _evaluate(
+            servers[s], clients_all[s], splits[s], fault=faults[s],
+            h_o_final=reps_all[s] if faulted else None,
+            fkey=fkeys[s] if faulted else None,
+            use_kernels=cfg.use_kernels)
+        if faulted:
+            diags[s].update(_fault_diags(faults[s], num_parties, metric))
+        results.append(VFLResult(name, metric,
+                                 entry_ledgers[s] if faulted else ledger,
+                                 clients_all[s], servers[s], diags[s]))
     return results
 
 
@@ -549,8 +849,10 @@ def run_few_shot(
     extractors: Sequence[Model],
     ssl_cfgs: Sequence[SSLConfig],
     cfg: Optional[ProtocolConfig] = None,
+    fault: Optional[FaultSpec] = None,
 ) -> VFLResult:
-    return _few_shot_seeds([key], [split], [extractors], [ssl_cfgs], cfg)[0]
+    return _few_shot_seeds([key], [split], [extractors], [ssl_cfgs], cfg,
+                           faults=None if fault is None else [fault])[0]
 
 
 # ---------------------------------------------------- multi-seed orchestrator
@@ -590,22 +892,28 @@ def _assert_ledgers_identical(ledgers: Sequence[CommLedger]) -> None:
 
 
 def _run_one_scenario_seeds(runner, impl, keys, splits, extractors, ssl_cfgs,
-                            cfg, **runner_kwargs) -> List[VFLResult]:
+                            cfg, faults=None, **runner_kwargs
+                            ) -> List[VFLResult]:
     """One scenario's S seeds when the cross-scenario fold doesn't apply:
     seed-batched when the runner has a registered ``*_seeds`` impl and the
     seeds share one shape, else a per-seed loop over the runner's cached
     sessions (with the ledger byte-identity asserted post hoc)."""
     num_seeds = len(keys)
     if impl is not None and _splits_are_homogeneous(splits):
+        kw = dict(runner_kwargs)
+        if faults is not None:
+            kw["faults"] = list(faults)
         results = impl(list(keys), list(splits), list(extractors),
-                       list(ssl_cfgs), cfg, **runner_kwargs)
+                       list(ssl_cfgs), cfg, **kw)
         if num_seeds > 1:       # the shared prototype ledger → per-seed copies
             for res in results:
                 res.ledger = _copy_ledger(res.ledger)
     else:
-        results = [runner(k, sp, ex, sc, cfg, **runner_kwargs)
-                   for k, sp, ex, sc in zip(keys, splits, extractors,
-                                            ssl_cfgs)]
+        results = [runner(k, sp, ex, sc, cfg,
+                          **(runner_kwargs if faults is None
+                             else {**runner_kwargs, "fault": faults[i]}))
+                   for i, (k, sp, ex, sc) in enumerate(zip(
+                       keys, splits, extractors, ssl_cfgs))]
         _assert_ledgers_identical([r.ledger for r in results])
     for res in results:
         res.diagnostics.setdefault("scenario_fold", 1)
@@ -668,14 +976,28 @@ def run_scenarios_seeds(
     runner_registry.reject_stateful_kwargs("run_scenarios_seeds",
                                            runner_kwargs, entry)
     impl = entry.seeds_impl if entry is not None else None
+    # faults is a C×S grid of Optional[FaultSpec] mirroring the data grids
+    # (DESIGN.md §16); it flattens scenario-major with them, as per-entry
+    # DATA — fold signatures and session-cache keys never see it
+    faults = runner_kwargs.pop("faults", None)
+    if faults is not None:
+        if (len(faults) != num_scenarios
+                or any(len(row) != num_seeds for row in faults)):
+            raise ValueError("faults must mirror the C×S grid: one entry "
+                             "(FaultSpec or None) per scenario per seed")
+        if not any(fa is not None for row in faults for fa in row):
+            faults = None
     flat_splits = [sp for row in splits for sp in row]
     if impl is not None and num_scenarios > 1 \
             and _splits_are_homogeneous(flat_splits):
         flat_keys = [k for row in keys for k in row]
         flat_ext = [e for row in extractors for e in row]
         flat_ssl = [s for row in ssl_cfgs for s in row]
+        kw = dict(runner_kwargs)
+        if faults is not None:
+            kw["faults"] = [fa for row in faults for fa in row]
         results = impl(flat_keys, flat_splits, flat_ext, flat_ssl, cfg,
-                       **runner_kwargs)
+                       **kw)
         if len(results) > 1:    # the shared prototype ledger → per-entry copies
             for res in results:
                 res.ledger = _copy_ledger(res.ledger)
@@ -688,7 +1010,10 @@ def run_scenarios_seeds(
                 for c in range(num_scenarios)]
     return [_run_one_scenario_seeds(runner, impl, list(keys[c]),
                                     list(splits[c]), list(extractors[c]),
-                                    list(ssl_cfgs[c]), cfg, **runner_kwargs)
+                                    list(ssl_cfgs[c]), cfg,
+                                    faults=(None if faults is None
+                                            else list(faults[c])),
+                                    **runner_kwargs)
             for c in range(num_scenarios)]
 
 
@@ -738,6 +1063,9 @@ def run_seeds(
     from repro.core import runners as runner_registry
     runner_registry.reject_stateful_kwargs(
         "run_seeds", runner_kwargs, runner_registry.resolve(runner))
+    faults = runner_kwargs.pop("faults", None)   # per-seed list → C = 1 grid
+    if faults is not None:
+        runner_kwargs["faults"] = [list(faults)]
     return run_scenarios_seeds(runner, [list(keys)], [list(splits)],
                                [list(extractors)], [list(ssl_cfgs)], cfg,
                                **runner_kwargs)[0]

@@ -31,7 +31,11 @@ KINDS = ("train", "serving")
 #: execution diagnostics a training row forwards from ``VFLResult``
 DIAGNOSTIC_KEYS = ("iterations", "engine_path", "seed_fold", "scenario_fold",
                    "device_fold", "kernel_fold", "kernel_fallback",
-                   "sdpa_fold")
+                   "sdpa_fold",
+                   # fault-injection diagnostics (DESIGN.md §16)
+                   "parties_survived", "fault_kind", "fault_stage",
+                   "degraded_metric", "fault_retry_rounds",
+                   "fault_retry_bytes", "fault_modeled")
 
 CORE_KEYS = ("kind", "metric_name", "metric", "comm_bytes", "comm_times")
 

@@ -26,6 +26,7 @@ from repro.engine.local_ssl import (
     make_ssl_optimizer,
     make_ssl_step_fn,
     parties_are_homogeneous,
+    schedule_steps,
     tasks_are_homogeneous,
     train_clients_ssl,
     train_parties_ssl_vmapped,
@@ -86,6 +87,7 @@ __all__ = [
     "pseudo_labels",
     "pseudo_labels_batched",
     "pseudo_labels_seeds",
+    "schedule_steps",
     "splitnn_sessions_seeds",
     "stack_carries",
     "tasks_are_homogeneous",

@@ -301,13 +301,16 @@ def _assert_seed_models_equal(extractors_per_seed, classifiers) -> None:
 def splitnn_sessions_seeds(extractors_per_seed, classifiers,
                            hp, carries: Sequence[Any],
                            xs_per_seed, ys, schedules,
-                           mode: str = "auto", mesh=None):
+                           mode: str = "auto", mesh=None,
+                           active_steps=None):
     """S seeds of one SplitNN session as ONE folded program.
 
     ``extractors_per_seed[s]`` / ``classifiers[s]`` are each seed's models
     (asserted semantically equal — one compiled step serves the fold);
     ``carries[s]`` the per-seed session carry; ``xs_per_seed[s]`` /
     ``ys[s]`` / ``schedules[s]`` the per-seed data and minibatch schedule.
+    ``active_steps`` (optional, (S,) — DESIGN.md §16) truncates each
+    seed's committed steps at a fault point, carry frozen past it.
     Returns ``(per-seed carries, (S, iters) losses)``.
     """
     from repro.engine import iterative        # deferred: sibling module
@@ -318,17 +321,20 @@ def splitnn_sessions_seeds(extractors_per_seed, classifiers,
         iterative.session_cache_key("splitnn", exts, clf, hp),
         lambda: iterative.make_splitnn_step_fn(exts, clf, hp),
         stack_carries(carries), _stack_party_data(xs_per_seed),
-        jnp.stack(list(ys)), jnp.stack(list(schedules)), mode, mesh=mesh)
+        jnp.stack(list(ys)), jnp.stack(list(schedules)), mode, mesh=mesh,
+        active_steps=active_steps)
     return unstack_carries(carry, len(carries)), losses
 
 
 def fedcvt_sessions_seeds(extractors_per_seed, classifiers, hp,
                           carries: Sequence[Any], xs_per_seed, ys,
                           schedules, xs_u_per_seed, u_schedules,
-                          mode: str = "auto", mesh=None):
+                          mode: str = "auto", mesh=None,
+                          active_steps=None):
     """S seeds of one FedCVT-style session as ONE folded program; the
     per-party unaligned pools and their draw schedules stack on the same
-    seed axis. Returns ``(per-seed carries, (S, iters) losses)``."""
+    seed axis. ``active_steps`` as in :func:`splitnn_sessions_seeds`.
+    Returns ``(per-seed carries, (S, iters) losses)``."""
     from repro.engine import iterative        # deferred: sibling module
 
     _assert_seed_models_equal(extractors_per_seed, classifiers)
@@ -341,15 +347,19 @@ def fedcvt_sessions_seeds(extractors_per_seed, classifiers, hp,
         jnp.stack(list(ys)), jnp.stack(list(schedules)), mode,
         xs_u=_stack_party_data(xs_u_per_seed),
         u_schedules=tuple(jnp.stack([us[k] for us in u_schedules])
-                          for k in range(num_parties)), mesh=mesh)
+                          for k in range(num_parties)), mesh=mesh,
+        active_steps=active_steps)
     return unstack_carries(carry, len(carries)), losses
 
 
 def fedbcd_sessions_seeds(extractors_per_seed, classifiers, hp, q: int,
                           carries: Sequence[Any], xs_per_seed, ys,
-                          schedules, mode: str = "auto", mesh=None):
+                          schedules, mode: str = "auto", mesh=None,
+                          active_steps=None):
     """S seeds of one FedBCD-p session (Q local updates per round) as ONE
-    folded program. Returns ``(per-seed carries, (S, rounds) losses)``."""
+    folded program. ``active_steps`` as in :func:`splitnn_sessions_seeds`
+    (units: communication ROUNDS). Returns ``(per-seed carries,
+    (S, rounds) losses)``."""
     from repro.engine import iterative        # deferred: sibling module
 
     _assert_seed_models_equal(extractors_per_seed, classifiers)
@@ -358,7 +368,8 @@ def fedbcd_sessions_seeds(extractors_per_seed, classifiers, hp, q: int,
         iterative.session_cache_key("fedbcd", exts, clf, hp, q),
         lambda: iterative.make_fedbcd_step_fn(exts, clf, hp, q),
         stack_carries(carries), _stack_party_data(xs_per_seed),
-        jnp.stack(list(ys)), jnp.stack(list(schedules)), mode, mesh=mesh)
+        jnp.stack(list(ys)), jnp.stack(list(schedules)), mode, mesh=mesh,
+        active_steps=active_steps)
     return unstack_carries(carry, len(carries)), losses
 
 

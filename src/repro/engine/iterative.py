@@ -314,9 +314,19 @@ def run_iterative_session_seeds(
     xs_u: Optional[Sequence[jnp.ndarray]] = None,
     u_schedules: Optional[Sequence[jnp.ndarray]] = None,
     mesh=None,
+    active_steps: Optional[jnp.ndarray] = None,
 ):
     """The seed-axis fold (DESIGN.md §11): run every seed's whole session
     as one program.
+
+    ``active_steps`` (optional, (S,) int32 — DESIGN.md §16) is the fault
+    axis: seed ``s`` commits only its first ``active_steps[s]`` steps — a
+    dropped party stalls the round loop there, so the carry freezes
+    (params AND optimizer state). Every step still COMPUTES (losses keep
+    shape (S, iters); frozen steps report the loss at the frozen carry),
+    so the faulted session is the same fixed-shape program with the
+    truncation point as data. ``None`` (fault-free) keeps the historical
+    cache key and program byte-identical.
 
     Every array argument carries a leading seed axis S: ``carry`` leaves
     are stacked on axis 0, ``xs``/``xs_u`` are per-party tuples of
@@ -356,6 +366,8 @@ def run_iterative_session_seeds(
     if mode == "python":
         step = _cached(("step", has_u) + cache_key,
                        lambda: jax.jit(make_step()))
+        act = (None if active_steps is None
+               else np.asarray(active_steps, np.int64))
         out_carries, out_losses = [], []
         for s in range(num_seeds):
             c = jax.tree_util.tree_map(lambda a: a[s], carry)
@@ -367,7 +379,11 @@ def run_iterative_session_seeds(
                 xb = tuple(x[s][sched[i]] for x in xs)
                 xub = (tuple(xu[s][us[i]] for xu, us in zip(xs_u, u_scheds))
                        if has_u else None)
-                c, loss = step(c, xb, y[s][sched[i]], xub)
+                # a stalled step still computes (matching the scan path's
+                # frozen-carry loss exactly) but never commits the carry
+                new_c, loss = step(c, xb, y[s][sched[i]], xub)
+                if act is None or i < act[s]:
+                    c = new_c
                 losses.append(loss)
             out_carries.append(c)
             out_losses.append(jnp.stack(losses))
@@ -377,45 +393,87 @@ def run_iterative_session_seeds(
     # "scan": the whole multi-seed session is one jitted program with a
     # donated stacked carry — vmap's batch axis IS the seed axis. Under a
     # mesh that axis pads to a device-count multiple and shards (§14).
+    # A faulted session (active_steps given) is a distinct cached program
+    # (the carry-select adds structure) — the FAULT-FREE key stays
+    # byte-identical to the historical one, and the truncation points
+    # themselves are arguments, so faulted sweeps of any mask re-serve it.
     pad = parallel.pad_width(num_seeds, mesh)
     mkey = (parallel.mesh_key(mesh),)
+    faulted = active_steps is not None
+    fkey = ("faulted",) if faulted else ()
+    if faulted:
+        active = parallel.pad_stacked(
+            jnp.asarray(active_steps, jnp.int32), pad)
     if has_u:
         def build():
             step = make_step()
 
-            def session(carry, xs, y, schedule, xs_u, u_scheds):
-                def body(c, inp):
-                    il, ius = inp
-                    return step(c, tuple(x[il] for x in xs), y[il],
-                                tuple(xu[iu] for xu, iu in zip(xs_u, ius)))
+            if faulted:
+                def session(carry, xs, y, schedule, xs_u, u_scheds, active):
+                    def body(c, inp):
+                        i, il, ius = inp
+                        new_c, loss = step(
+                            c, tuple(x[il] for x in xs), y[il],
+                            tuple(xu[iu] for xu, iu in zip(xs_u, ius)))
+                        # past the truncation point the carry freezes —
+                        # computed, never committed (loss stays recorded)
+                        new_c = jax.tree_util.tree_map(
+                            lambda a, b: jnp.where(i < active, a, b),
+                            new_c, c)
+                        return new_c, loss
 
-                return jax.lax.scan(body, carry, (schedule, u_scheds))
+                    steps = jnp.arange(schedule.shape[0])
+                    return jax.lax.scan(body, carry,
+                                        (steps, schedule, u_scheds))
+            else:
+                def session(carry, xs, y, schedule, xs_u, u_scheds):
+                    def body(c, inp):
+                        il, ius = inp
+                        return step(c, tuple(x[il] for x in xs), y[il],
+                                    tuple(xu[iu] for xu, iu in zip(xs_u, ius)))
+
+                    return jax.lax.scan(body, carry, (schedule, u_scheds))
 
             return parallel.shard_jit(jax.vmap(session), mesh)
 
-        session = _cached(("scan", True) + cache_key + mkey, build)
-        out, losses = session(
-            parallel.pad_stacked(carry, pad), parallel.pad_stacked(xs, pad),
-            parallel.pad_stacked(y, pad), parallel.pad_stacked(schedule, pad),
-            parallel.pad_stacked(xs_u, pad),
-            parallel.pad_stacked(u_schedules, pad))
+        session = _cached(("scan", True) + fkey + cache_key + mkey, build)
+        args = (parallel.pad_stacked(carry, pad),
+                parallel.pad_stacked(xs, pad),
+                parallel.pad_stacked(y, pad),
+                parallel.pad_stacked(schedule, pad),
+                parallel.pad_stacked(xs_u, pad),
+                parallel.pad_stacked(u_schedules, pad))
+        out, losses = session(*(args + (active,) if faulted else args))
         return parallel.strip_stacked(out, num_seeds), losses[:num_seeds]
 
     def build():
         step = make_step()
 
-        def session(carry, xs, y, schedule):
-            def body(c, il):
-                return step(c, tuple(x[il] for x in xs), y[il], None)
+        if faulted:
+            def session(carry, xs, y, schedule, active):
+                def body(c, inp):
+                    i, il = inp
+                    new_c, loss = step(c, tuple(x[il] for x in xs),
+                                       y[il], None)
+                    new_c = jax.tree_util.tree_map(
+                        lambda a, b: jnp.where(i < active, a, b), new_c, c)
+                    return new_c, loss
 
-            return jax.lax.scan(body, carry, schedule)
+                steps = jnp.arange(schedule.shape[0])
+                return jax.lax.scan(body, carry, (steps, schedule))
+        else:
+            def session(carry, xs, y, schedule):
+                def body(c, il):
+                    return step(c, tuple(x[il] for x in xs), y[il], None)
+
+                return jax.lax.scan(body, carry, schedule)
 
         return parallel.shard_jit(jax.vmap(session), mesh)
 
-    session = _cached(("scan", False) + cache_key + mkey, build)
-    out, losses = session(
-        parallel.pad_stacked(carry, pad), parallel.pad_stacked(xs, pad),
-        parallel.pad_stacked(y, pad), parallel.pad_stacked(schedule, pad))
+    session = _cached(("scan", False) + fkey + cache_key + mkey, build)
+    args = (parallel.pad_stacked(carry, pad), parallel.pad_stacked(xs, pad),
+            parallel.pad_stacked(y, pad), parallel.pad_stacked(schedule, pad))
+    out, losses = session(*(args + (active,) if faulted else args))
     return parallel.strip_stacked(out, num_seeds), losses[:num_seeds]
 
 

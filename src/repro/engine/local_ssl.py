@@ -85,7 +85,15 @@ class PartyTask:
     ``labeled_mask`` / ``unlabeled_mask`` (optional, per-row 0/1 validity)
     make the task *masked fixed-shape*: ``x_labeled`` is padded to a static
     capacity shared by every party and masked-out rows contribute zero
-    loss. ``None`` means every row is valid (the one-shot phase-④ case)."""
+    loss. ``None`` means every row is valid (the one-shot phase-④ case).
+
+    ``step_valid`` (optional, per-STEP 0/1 validity over the flattened
+    epoch×batch schedule) is the fault axis (DESIGN.md §16): a 0 step
+    computes but does not commit — params AND optimizer state freeze, so
+    a straggler (trailing zeros), a dropped party (all zeros), or an
+    APC-style representation-only party (all zeros) runs the SAME
+    fixed-shape session as its healthy peers, mask as data. ``None``
+    means every step commits (the fault-free case)."""
     extractor: Model
     head: Model
     params: PartyParams
@@ -96,6 +104,7 @@ class PartyTask:
     feature_mean: Optional[jnp.ndarray] = None   # x̄ for FixMatch-tab
     labeled_mask: Optional[jnp.ndarray] = None   # (N_l,) row validity
     unlabeled_mask: Optional[jnp.ndarray] = None  # (N_u,) row validity
+    step_valid: Optional[jnp.ndarray] = None     # (S,) per-step commit mask
 
 
 class Schedule(NamedTuple):
@@ -154,6 +163,16 @@ def make_ssl_step_fn(extractor: Model, head: Model, ssl_cfg: "SSLConfig",
 # state. The offset is a prime far above any epoch count, so neither stream
 # ever reuses the other's seed (7919*e + 104729 > e' for every e, e' < 10^4).
 _UNLABELED_STREAM = 104729
+
+
+def schedule_steps(n_labeled: int, hp: SSLHParams) -> int:
+    """How many steps :func:`build_schedule` will flatten the epoch loop
+    into — the length a ``PartyTask.step_valid`` mask must have. Mirrors
+    the drop-remainder batching exactly (``epoch_batches``)."""
+    bs_l = min(hp.batch_size, n_labeled)
+    if bs_l == 0:
+        return 0
+    return hp.epochs * (n_labeled // bs_l)
 
 
 def build_schedule(key: jax.Array, n_labeled: int, n_unlabeled: int,
@@ -215,14 +234,20 @@ def train_party_ssl(key: jax.Array, task: PartyTask, hp: SSLHParams
     idx_l = np.asarray(sched.idx_labeled)
     idx_u = np.asarray(sched.idx_unlabeled)
     m_l, m_u = task.labeled_mask, task.unlabeled_mask
+    sv = None if task.step_valid is None else np.asarray(task.step_valid)
     metrics: dict = {}
     for i in range(idx_l.shape[0]):
-        params, opt_state, m = step(
+        # an invalid step still COMPUTES (so the recorded metrics match the
+        # vmapped session's frozen-carry step exactly) but never commits:
+        # params and optimizer state freeze together — no momentum coast
+        new_params, new_opt, m = step(
             params, opt_state, task.feature_mean, sched.step_keys[i],
             task.x_labeled[idx_l[i]], task.y_pseudo[idx_l[i]],
             task.x_unlabeled[idx_u[i]],
             None if m_l is None else m_l[idx_l[i]],
             None if m_u is None else m_u[idx_u[i]])
+        if sv is None or sv[i] > 0:
+            params, opt_state = new_params, new_opt
         metrics = m
     return params, {k: float(v) for k, v in metrics.items()}
 
@@ -280,7 +305,8 @@ def tasks_are_homogeneous(tasks: Sequence[PartyTask]) -> bool:
             return False
         if t.ssl_cfg != t0.ssl_cfg:
             return False
-        for attr in ("feature_mean", "labeled_mask", "unlabeled_mask"):
+        for attr in ("feature_mean", "labeled_mask", "unlabeled_mask",
+                     "step_valid"):
             a, a0 = getattr(t, attr), getattr(t0, attr)
             if (a is None) != (a0 is None):
                 return False
@@ -353,40 +379,58 @@ def train_parties_ssl_vmapped(keys: Sequence[jax.Array],
            else jnp.stack([t.labeled_mask for t in tasks]))
     m_u = (None if t0.unlabeled_mask is None
            else jnp.stack([t.unlabeled_mask for t in tasks]))
+    # the fault axis (DESIGN.md §16): per-step commit masks stack like any
+    # other argument — presence shapes the program, CONTENTS never do, so
+    # a sweep whose fault masks change re-serves the cached session
+    sv = (None if t0.step_valid is None
+          else jnp.stack([t.step_valid for t in tasks]))
 
     def build():
         step = make_ssl_step_fn(t0.extractor, t0.head, t0.ssl_cfg, tx)
 
         def one_party(params, feature_mean, x_lab, y_lab, x_unl,
-                      mask_lab, mask_unl, i_l, i_u, keys_s):
+                      mask_lab, mask_unl, i_l, i_u, keys_s, sv_steps):
             opt_state = tx.init(params)
 
             def body(carry, inp):
                 p, o = carry
-                il, iu, kk = inp
-                p, o, m = step(p, o, feature_mean, kk,
-                               x_lab[il], y_lab[il], x_unl[iu],
-                               None if mask_lab is None else mask_lab[il],
-                               None if mask_unl is None else mask_unl[iu])
-                return (p, o), m
+                if sv_steps is None:
+                    il, iu, kk = inp
+                    sv_t = None
+                else:
+                    il, iu, kk, sv_t = inp
+                new_p, new_o, m = step(
+                    p, o, feature_mean, kk,
+                    x_lab[il], y_lab[il], x_unl[iu],
+                    None if mask_lab is None else mask_lab[il],
+                    None if mask_unl is None else mask_unl[iu])
+                if sv_t is not None:
+                    # invalid step: computed but not committed — params and
+                    # optimizer state freeze together (no momentum coast)
+                    new_p = jax.tree_util.tree_map(
+                        lambda a, b: jnp.where(sv_t > 0, a, b), new_p, p)
+                    new_o = jax.tree_util.tree_map(
+                        lambda a, b: jnp.where(sv_t > 0, a, b), new_o, o)
+                return (new_p, new_o), m
 
-            (params, _), ms = jax.lax.scan(body, (params, opt_state),
-                                           (i_l, i_u, keys_s))
+            xs = ((i_l, i_u, keys_s) if sv_steps is None
+                  else (i_l, i_u, keys_s, sv_steps))
+            (params, _), ms = jax.lax.scan(body, (params, opt_state), xs)
             last = jax.tree_util.tree_map(lambda a: a[-1], ms)
             return params, last
 
         axes = tuple(None if arg is None else 0
-                     for arg in (0, fm, 0, 0, 0, m_l, m_u, 0, 0, 0))
+                     for arg in (0, fm, 0, 0, 0, m_l, m_u, 0, 0, 0, sv))
         return parallel.shard_jit(jax.vmap(one_party, in_axes=axes), mesh)
 
     fn = sessions.cached_session(
         "ssl",
         ("vmap", sessions.model_key(t0.extractor), sessions.model_key(t0.head),
          t0.ssl_cfg, _optimizer_key(hp), fm is None, m_l is None, m_u is None,
-         parallel.mesh_key(mesh)),
+         sv is None, parallel.mesh_key(mesh)),
         build)
     new_params, metrics = fn(stacked_params, fm, x_l, y_l, x_u, m_l, m_u,
-                             idx_l, idx_u, step_keys)
+                             idx_l, idx_u, step_keys, sv)
     params_list = _unstack(new_params, k)
     metrics_list = [{name: float(v[i]) for name, v in metrics.items()}
                     for i in range(k)]

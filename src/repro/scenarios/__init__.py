@@ -2,6 +2,7 @@
 
 Importing this package registers the full catalog. See DESIGN.md §8.
 """
+from repro.scenarios.faults import FaultSpec
 from repro.scenarios.registry import (
     GENERATORS,
     ScenarioBundle,
@@ -20,6 +21,7 @@ from repro.scenarios.grouping import (
 )
 
 __all__ = [
+    "FaultSpec",
     "GENERATORS",
     "ScenarioBundle",
     "ScenarioGroup",

@@ -22,9 +22,17 @@ Families:
   and stack into a single scenario-folded group (DESIGN.md §14).
 * ``image/halves`` and ``image/patch-4`` — image modality split into
   vertical strips (paper §5.1) or a 2×2 patch grid (4 parties).
+* ``fault/*``             — the fault-injection family (DESIGN.md §16): one
+  4-party tabular condition replicated under party-1 dropout at each of the
+  four named protocol stages, a half-budget straggler, DP-noised uploads at
+  two σ, and an APC-style representation-only party — plus the fault-free
+  twin ``fault/none`` the gate measures degradation deltas against. The
+  fault rides the spec as pure data (excluded from ``fold_signature``), so
+  the whole family folds into ONE stacked S×C×K group.
 """
 from __future__ import annotations
 
+from repro.scenarios.faults import FaultSpec
 from repro.scenarios.registry import ScenarioSpec, register
 
 OVERLAP_SWEEP = (32, 64, 128, 256, 512, 1024, 2048)
@@ -161,6 +169,60 @@ register(ScenarioSpec(
     smoke_samples=1000,
     description="full overlap: N_o = all rows, empty private pools",
 ))
+
+def _fault_member(suffix: str, fault, description: str) -> ScenarioSpec:
+    # ONE experimental condition, nine fault treatments: every member is
+    # byte-identical except ``fault``, which fold_signature excludes — the
+    # partitioner therefore puts the whole family in one stacked group and
+    # the degradation delta vs fault/none is measured inside one program
+    return ScenarioSpec(
+        name=f"fault/{suffix}",
+        modality="tabular",
+        generator="cluster_tabular",
+        overlap=32,
+        num_samples=3000,
+        num_parties=4,
+        gen_params=(("num_informative", 24), ("num_nuisance", 16),
+                    ("num_clusters", 12), ("cluster_std", 0.3),
+                    ("nuisance_std", 2.0), ("label_noise", 0.15)),
+        feature_sizes=(10, 10, 10, 10),
+        rep_dim=16,
+        ssl_params=(("confidence_threshold", 0.8),),
+        fault=fault,
+        budgets=(("client_epochs", 20), ("server_epochs", 30),
+                 ("iterations", 200)),
+        tags=("fault", "tabular", "frontier"),
+        smoke_samples=3000,
+        smoke_overlap=32,
+        description=description,
+    )
+
+
+register(_fault_member(
+    "none", None,
+    "fault-free twin of the fault/* family — the degradation baseline"))
+for _stage in ("pre-upload", "pre-ssl", "post-ssl", "pre-round2"):
+    register(_fault_member(
+        f"dropout-{_stage}",
+        FaultSpec(kind="dropout", party=1, stage=_stage.replace("-", "_")),
+        f"party 1 of 4 drops out {_stage.replace('-', ' ')}: one-shot "
+        "reconstructs H_o via Eq. 10, iterative stalls and retries"))
+register(_fault_member(
+    "straggler-half",
+    FaultSpec(kind="straggler", party=1, epoch_fraction=0.5),
+    "party 1 completes only half its local SSL epoch budget"))
+for _sigma in (0.1, 0.5):
+    register(_fault_member(
+        f"dp-sigma-{_sigma}",
+        FaultSpec(kind="dp_upload", party=1, dp_sigma=_sigma),
+        f"party 1 noises every upload at sigma={_sigma}x std "
+        "(bytes unchanged — privacy costs accuracy, not communication)"))
+register(_fault_member(
+    "rep-only",
+    FaultSpec(kind="representation_only", party=1),
+    "APC-style passive party: contributes representations, never "
+    "runs local SSL (frozen extractor)"))
+
 
 register(ScenarioSpec(
     name="image/halves",

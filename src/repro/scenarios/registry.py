@@ -31,6 +31,7 @@ import jax
 from repro.core.ssl import SSLConfig
 from repro.data import synthetic, vertical
 from repro.models.extractors import Model
+from repro.scenarios.faults import FaultSpec
 
 GENERATORS: Dict[str, Callable] = {
     "tabular_credit": synthetic.make_tabular_credit,
@@ -64,6 +65,10 @@ class ScenarioSpec:
     blocks_per_stage: int = 1
     ssl_params: Tuple[Tuple[str, Any], ...] = ()
     fewshot_threshold: Optional[float] = None         # Eq. 9 gate t (None = default)
+    #: injected party fault (DESIGN.md §16). Pure data the runners thread
+    #: through as per-entry arguments — deliberately EXCLUDED from
+    #: ``grouping.fold_signature`` so a mixed-fault family still stacks.
+    fault: Optional[FaultSpec] = None
     budgets: Tuple[Tuple[str, int], ...] = ()         # training-budget hints
     tags: Tuple[str, ...] = ()
     smoke_overlap: int = 32
